@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks (CPU wall time of the jnp paths + interpret-mode
+functional checks; TPU perf comes from the §Roofline dry-run, not here).
+
+Rows: us_per_call = wall time; derived = a kernel-specific figure of merit
+(tile-skip fraction, GFLOP count, rel-err vs oracle).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.masked_matmul.ops import masked_matmul, tile_skip_fraction
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.stochastic_round.ops import stochastic_round
+
+
+def _time(fn, *args, iters: int = 10, **kw) -> float:
+    jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def rows() -> list[tuple[str, float, float]]:
+    out = []
+    key = jax.random.PRNGKey(0)
+
+    x = jax.random.normal(key, (512, 1024))
+    us = _time(stochastic_round, x, jnp.uint32(1), impl="ref")
+    out.append(("kernel.stochastic_round.512x1024", us, x.size / 1e6))
+
+    # block-sparse fixed-point matmul: 50% of 128-tiles pruned
+    m = k = n = 512
+    a = jnp.round(jax.random.normal(key, (m, k)) * 64) / 256
+    w = jnp.round(jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 64) / 256
+    a = a.at[:256, :256].set(0.0)
+    w = w.at[256:, 256:].set(0.0)
+    us = _time(masked_matmul, a, w, jnp.uint32(3), impl="ref")
+    skip = float(tile_skip_fraction(a, w))
+    out.append(("kernel.masked_matmul.512cube", us, skip))
+
+    q = jax.random.normal(key, (1, 4, 512, 64))
+    kk = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 512, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (1, 2, 512, 64))
+    us = _time(flash_attention, q, kk, v, causal=True, impl="ref")
+    flops = 4 * 1 * 4 * 512 * 512 * 64 / 2  # causal half
+    out.append(("kernel.flash_attention.b1h4s512", us, flops / 1e9))
+
+    xs = jax.random.normal(key, (2, 512, 8, 64))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 4), (2, 512, 8)))
+    aa = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 5), (8,)) * 0.3)
+    b = jax.random.normal(jax.random.fold_in(key, 6), (2, 512, 2, 64)) / 8
+    c = jax.random.normal(jax.random.fold_in(key, 7), (2, 512, 2, 64)) / 8
+    us = _time(ssd_scan, xs, dt, aa, b, c, impl="jnp")
+    ref = ssd_scan(xs, dt, aa, b, c, impl="ref")
+    got = ssd_scan(xs, dt, aa, b, c, impl="jnp")
+    rel = float(jnp.max(jnp.abs(got - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    out.append(("kernel.ssd_scan.b2s512h8", us, rel))
+    return out

@@ -1,0 +1,45 @@
+"""Paper Figs. 11-16: SPRING vs GTX 1080 Ti across the seven CNNs —
+performance (11/12), reciprocal power (13/14), energy efficiency (15/16)
+for training and inference, from the analytical model (perfmodel/).
+
+Rows: name, us_per_call = modeled SPRING batch latency (us),
+derived = the figure's ratio (speedup | power reduction | energy eff).
+"""
+
+from __future__ import annotations
+
+from repro.models.cnn import PAPER_CNNS
+from repro.perfmodel.spring_model import evaluate_cnn, geomean
+
+PAPER_GEOMEANS = {
+    ("train", "speedup"): 15.6,
+    ("train", "power_reduction"): 4.2,
+    ("train", "energy_eff"): 66.0,
+    ("inference", "speedup"): 15.5,
+    ("inference", "power_reduction"): 4.5,
+    ("inference", "energy_eff"): 69.1,
+}
+
+_FIG = {
+    ("train", "speedup"): "fig11_perf_train",
+    ("inference", "speedup"): "fig12_perf_infer",
+    ("train", "power_reduction"): "fig13_power_train",
+    ("inference", "power_reduction"): "fig14_power_infer",
+    ("train", "energy_eff"): "fig15_energy_train",
+    ("inference", "energy_eff"): "fig16_energy_infer",
+}
+
+
+def rows() -> list[tuple[str, float, float]]:
+    out = []
+    for training in (True, False):
+        phase = "train" if training else "inference"
+        results = [evaluate_cnn(d, training=training) for d in PAPER_CNNS.values()]
+        for metric in ("speedup", "power_reduction", "energy_eff"):
+            fig = _FIG[(phase, metric)]
+            for r in results:
+                out.append((f"{fig}.{r['cnn']}", r["spring_time_s"] * 1e6, r[metric]))
+            gm = geomean(r[metric] for r in results)
+            out.append((f"{fig}.GEOMEAN", 0.0, gm))
+            out.append((f"{fig}.PAPER_GEOMEAN", 0.0, PAPER_GEOMEANS[(phase, metric)]))
+    return out

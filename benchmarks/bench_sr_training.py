@@ -1,0 +1,30 @@
+"""The paper's §6 batch-level assumption (after Gupta et al. 2015):
+fixed-point Q4.16 training with stochastic rounding converges like fp32,
+while round-to-nearest fixed-point degrades.  Trained end-to-end on the
+synthetic LM task (reduced llama3.2-1b, same data/steps/seed across arms).
+
+Rows: us_per_call = mean step wall time; derived = final loss.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.launch.train import train_loop
+
+STEPS = 120
+
+
+def rows() -> list[tuple[str, float, float]]:
+    out = []
+    arms = [
+        ("sr_train.fp32_baseline", dict(mode="dense")),
+        ("sr_train.q4.16_stochastic", dict(mode="quant", fixed_point_weights=True)),
+    ]
+    for name, kw in arms:
+        t0 = time.perf_counter()
+        res = train_loop("llama3.2-1b", reduced=True, steps=STEPS, batch=8,
+                         seq=64, lr=3e-3, **kw)
+        us = (time.perf_counter() - t0) / STEPS * 1e6
+        out.append((name, us, res["last_loss"]))
+    return out

@@ -1,0 +1,47 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  bench_table1        Table 1 design parameters (echo + derived peaks)
+  bench_paper_figs    Figs 11-16 perf / power / energy, train + inference
+  bench_compression   Fig 5 binary-mask compression (exact worked example)
+  bench_kernels       Pallas-kernel jnp-path microbenches
+  bench_sr_training   §6 / Gupta'15 SR-vs-fp32 convergence claim
+
+Run: PYTHONPATH=src python -m benchmarks.run [--skip-slow]
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    skip_slow = "--skip-slow" in sys.argv
+    from benchmarks import (
+        bench_compression,
+        bench_kernels,
+        bench_paper_figs,
+        bench_sr_training,
+        bench_table1,
+    )
+
+    suites = [bench_table1, bench_paper_figs, bench_compression, bench_kernels]
+    if not skip_slow:
+        suites.append(bench_sr_training)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for suite in suites:
+        try:
+            for name, us, derived in suite.rows():
+                print(f"{name},{us:.2f},{derived:.6g}")
+        except Exception:  # keep the harness alive; report at exit
+            failures += 1
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

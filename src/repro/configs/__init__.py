@@ -1,0 +1,6 @@
+"""Architecture registry: the 10 assigned archs (+ paper CNNs)."""
+
+from repro.configs.base import SHAPES, ArchDef, ShapeSpec
+from repro.configs.registry import ARCHS, get_arch
+
+__all__ = ["SHAPES", "ArchDef", "ShapeSpec", "ARCHS", "get_arch"]

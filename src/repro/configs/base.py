@@ -1,0 +1,109 @@
+"""Architecture registry scaffolding: shape cells + per-arch adapters.
+
+Each assigned architecture file defines ``ARCH`` (an ``ArchDef``) with the
+exact published config, a ``reduced()`` smoke-test variant of the same
+family, and ``input_specs(shape)`` ShapeDtypeStruct stand-ins used by the
+multi-pod dry-run (never allocated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.encdec import EncDecConfig
+from repro.models.lm import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    arch_id: str
+    family: str  # dense | hybrid | vlm | moe | ssm | audio
+    config: Union[LMConfig, EncDecConfig]
+    reduced: Callable[[], Union[LMConfig, EncDecConfig]]
+    source: str = ""
+
+    @property
+    def is_encdec(self) -> bool:
+        return isinstance(self.config, EncDecConfig)
+
+    def applicable_shapes(self) -> list[str]:
+        out = ["train_4k", "prefill_32k", "decode_32k"]
+        if self.config.supports_long_context:
+            out.append("long_500k")
+        return out
+
+    def skipped_shapes(self) -> dict[str, str]:
+        if not self.config.supports_long_context:
+            return {"long_500k": "pure quadratic attention; 500k-token cell "
+                                 "intractable by design (DESIGN.md §5)"}
+        return {}
+
+    # ---- input ShapeDtypeStructs per shape cell (dry-run stand-ins) ----
+
+    def input_specs(self, shape_name: str, cfg=None) -> dict:
+        cfg = cfg or self.config
+        sh = SHAPES[shape_name]
+        b, s = sh.global_batch, sh.seq_len
+        tok = jnp.int32
+        if self.is_encdec:
+            d = cfg.d_model
+            if sh.kind in ("train", "prefill"):
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, cfg.enc_seq, d), jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((b, s), tok),
+                }
+            return {"tokens": jax.ShapeDtypeStruct((b,), tok)}
+        specs: dict = {}
+        if sh.kind in ("train", "prefill"):
+            text_len = s - cfg.vlm_prefix_len
+            specs["tokens"] = jax.ShapeDtypeStruct((b, text_len), tok)
+            if cfg.vlm_prefix_len:
+                specs["img_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.vlm_prefix_len, cfg.d_model), jnp.bfloat16
+                )
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b,), tok)
+        return specs
+
+    def cache_specs(self, shape_name: str, cfg=None, cache_dtype=None) -> dict:
+        """ShapeDtypeStruct pytree for the serving cache at this shape."""
+        cfg = cfg or self.config
+        sh = SHAPES[shape_name]
+        import jax.numpy as _jnp
+
+        cache_dtype = cache_dtype or _jnp.bfloat16
+
+        if self.is_encdec:
+            from repro.models.encdec import encdec_init, encdec_init_cache
+            from repro.models.layers import SpringContext
+
+            def build():
+                params = encdec_init(jax.random.PRNGKey(0), cfg)
+                frames = jnp.zeros((sh.global_batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+                return encdec_init_cache(params, cfg, frames, SpringContext(), sh.seq_len)
+
+            return jax.eval_shape(build)
+        from repro.models.lm import lm_init_cache
+
+        return jax.eval_shape(
+            lambda: lm_init_cache(cfg, sh.global_batch, sh.seq_len, cache_dtype))

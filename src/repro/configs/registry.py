@@ -1,0 +1,29 @@
+"""Registry of the 10 assigned architectures (--arch <id>)."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchDef
+from repro.configs.deepseek_v2_lite_16b import ARCH as _deepseek
+from repro.configs.internvl2_26b import ARCH as _internvl2
+from repro.configs.llama3_2_1b import ARCH as _llama
+from repro.configs.mamba2_780m import ARCH as _mamba2
+from repro.configs.minitron_4b import ARCH as _minitron
+from repro.configs.mistral_nemo_12b import ARCH as _nemo
+from repro.configs.olmoe_1b_7b import ARCH as _olmoe
+from repro.configs.qwen2_7b import ARCH as _qwen2
+from repro.configs.recurrentgemma_9b import ARCH as _rgemma
+from repro.configs.whisper_medium import ARCH as _whisper
+
+ARCHS: dict[str, ArchDef] = {
+    a.arch_id: a
+    for a in [
+        _minitron, _nemo, _qwen2, _llama, _rgemma,
+        _internvl2, _deepseek, _olmoe, _mamba2, _whisper,
+    ]
+}
+
+
+def get_arch(arch_id: str) -> ArchDef:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(ARCHS)}")
+    return ARCHS[arch_id]

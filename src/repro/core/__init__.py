@@ -1,0 +1,42 @@
+"""SPRING core: fixed-point SR arithmetic + binary-mask sparsity."""
+
+from repro.core.fixedpoint import (
+    SPRING_ACCUM_FORMAT,
+    SPRING_FORMAT,
+    FixedPointFormat,
+    from_int,
+    quantize_nearest,
+    quantize_stochastic,
+    quantize_stochastic_from_bits,
+    ste_quantize_nearest,
+    ste_quantize_stochastic,
+    to_int,
+)
+from repro.core.masking import (
+    MaskedVector,
+    compression_ratio,
+    density,
+    mask_decode,
+    mask_encode,
+    pack_mask_bits,
+    tile_occupancy,
+    unpack_mask_bits,
+)
+from repro.core.sparsity import (
+    MatchedOperands,
+    apply_joint_mask,
+    generate_masks,
+    postcompute_sparsity,
+    precompute_sparsity,
+    sparse_dot,
+)
+from repro.core.spring_ops import (
+    DENSE,
+    QUANT,
+    QUANT_SPARSE,
+    KeyGen,
+    SpringConfig,
+    spring_conv2d,
+    spring_einsum,
+    spring_matmul,
+)

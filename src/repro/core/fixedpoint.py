@@ -1,0 +1,182 @@
+"""Reduced-precision fixed-point arithmetic with stochastic rounding (SPRING P2).
+
+SPRING evaluates CNNs in Q(IL, FL) fixed point (paper Table 1: IL=4, FL=16)
+and keeps *training* convergent by rounding stochastically (Eq. 4, after
+Gupta et al. 2015) every time a value narrows back to the storage format.
+
+Representation choice (TPU adaptation, DESIGN.md §2/P2): quantized tensors
+are carried as float32 values *snapped to the fixed-point grid*
+(``value = q * 2**-FL`` with ``q`` an integer in the IL+FL-bit range).
+float32 represents every Q4.16 grid point exactly (20-bit significand
+< 24-bit fp32 mantissa), matmuls run on the MXU/VPU natively, and
+``to_int``/``from_int`` convert to the raw integer storage format used by
+the binary-mask compression and checkpoint paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointFormat:
+    """Q(IL, FL) signed fixed-point format.
+
+    ``il`` integer bits (including none for sign — sign is separate, as in
+    the paper's IL+FL description with symmetric range), ``fl`` fractional
+    bits.  Representable grid: ``{-2**il, ..., -eps, 0, eps, ..., 2**il - eps}``
+    with ``eps = 2**-fl``.
+    """
+
+    il: int = 4
+    fl: int = 16
+
+    @property
+    def eps(self) -> float:
+        return 2.0 ** (-self.fl)
+
+    @property
+    def max_value(self) -> float:
+        return 2.0**self.il - self.eps
+
+    @property
+    def min_value(self) -> float:
+        return -(2.0**self.il)
+
+    @property
+    def bits(self) -> int:
+        """Storage bits per element (sign + IL + FL), as in the paper."""
+        return 1 + self.il + self.fl
+
+    def tree_flatten(self):  # pragma: no cover - convenience
+        return (), (self.il, self.fl)
+
+
+# The paper's Table-1 format.
+SPRING_FORMAT = FixedPointFormat(il=4, fl=16)
+# Wider accumulator format (2x(IL+FL), paper MAC-lane internal width).
+SPRING_ACCUM_FORMAT = FixedPointFormat(il=8, fl=32)
+
+
+def _clip_to_range(x: jax.Array, fmt: FixedPointFormat) -> jax.Array:
+    return jnp.clip(x, fmt.min_value, fmt.max_value)
+
+
+def quantize_nearest(x: jax.Array, fmt: FixedPointFormat = SPRING_FORMAT) -> jax.Array:
+    """Deterministic round-to-nearest onto the Q(IL,FL) grid (paper Eq. 3)."""
+    x = _clip_to_range(x.astype(jnp.float32), fmt)
+    scaled = x * (2.0**fmt.fl)
+    return jnp.round(scaled) * fmt.eps
+
+
+def quantize_stochastic(
+    key: jax.Array, x: jax.Array, fmt: FixedPointFormat = SPRING_FORMAT
+) -> jax.Array:
+    """Stochastic rounding onto the Q(IL,FL) grid (paper Eq. 4).
+
+    ``Round(x) = floor(x)`` w.p. ``(floor(x)+eps-x)/eps`` else ``floor(x)+eps``,
+    i.e. round down with probability proportional to proximity; unbiased:
+    ``E[Round(x)] = x`` for in-range x.
+    """
+    x = _clip_to_range(x.astype(jnp.float32), fmt)
+    scaled = x * (2.0**fmt.fl)
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    rounded = lo + (u < frac).astype(jnp.float32)
+    return _clip_to_range(rounded * fmt.eps, fmt)
+
+
+def quantize_stochastic_from_bits(
+    random_bits: jax.Array, x: jax.Array, fmt: FixedPointFormat = SPRING_FORMAT
+) -> jax.Array:
+    """SR driven by externally supplied uint32 random bits.
+
+    This is the form the Pallas kernel implements (the paper drives its SR
+    module from an LFSR; we use in-kernel xorshift32 bits — see
+    ``kernels/stochastic_round``).  ``random_bits`` must be uint32 with
+    ``x.shape``.
+    """
+    x = _clip_to_range(x.astype(jnp.float32), fmt)
+    scaled = x * (2.0**fmt.fl)
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+    # Map uint32 -> [0, 1) with 24-bit resolution (fp32-exact).
+    u = (random_bits >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / (1 << 24))
+    rounded = lo + (u < frac).astype(jnp.float32)
+    return _clip_to_range(rounded * fmt.eps, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through-estimator wrappers: SPRING trains *through* the rounding
+# (the rounding error is exposed to the network; gradients treat the
+# quantizer as identity on the in-range region).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ste_quantize_nearest(x: jax.Array, fmt: FixedPointFormat) -> jax.Array:
+    return quantize_nearest(x, fmt)
+
+
+def _ste_qn_fwd(x, fmt):
+    return quantize_nearest(x, fmt), x
+
+
+def _ste_qn_bwd(fmt, res, g):
+    x = res
+    in_range = (x >= fmt.min_value) & (x <= fmt.max_value)
+    return (jnp.where(in_range, g, 0.0),)
+
+
+ste_quantize_nearest.defvjp(_ste_qn_fwd, _ste_qn_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def ste_quantize_stochastic(key: jax.Array, x: jax.Array, fmt: FixedPointFormat) -> jax.Array:
+    return quantize_stochastic(key, x, fmt)
+
+
+def _ste_qs_fwd(key, x, fmt):
+    return quantize_stochastic(key, x, fmt), x
+
+
+def _ste_qs_bwd(fmt, res, g):
+    x = res
+    in_range = (x >= fmt.min_value) & (x <= fmt.max_value)
+    return (None, jnp.where(in_range, g, 0.0))
+
+
+ste_quantize_stochastic.defvjp(_ste_qs_fwd, _ste_qs_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Integer raw storage conversions (used by mask compression / checkpoints).
+# ---------------------------------------------------------------------------
+
+
+def to_int(x: jax.Array, fmt: FixedPointFormat = SPRING_FORMAT) -> jax.Array:
+    """Grid-snapped float -> raw int32 (``q`` such that ``x = q * eps``)."""
+    return jnp.round(x.astype(jnp.float32) * (2.0**fmt.fl)).astype(jnp.int32)
+
+
+def from_int(q: jax.Array, fmt: FixedPointFormat = SPRING_FORMAT) -> jax.Array:
+    return q.astype(jnp.float32) * fmt.eps
+
+
+def quantization_noise_bound(fmt: FixedPointFormat) -> float:
+    """Worst-case |x - Round(x)| for either rounding mode (< eps)."""
+    return fmt.eps
+
+
+def pytree_quantize_stochastic(key: jax.Array, tree: Any, fmt: FixedPointFormat) -> Any:
+    """SR-quantize every leaf of a pytree with independent keys."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [quantize_stochastic(k, leaf, fmt) for k, leaf in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)

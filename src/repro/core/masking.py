@@ -1,0 +1,121 @@
+"""Binary-mask sparsity encoding (SPRING P1, paper Fig. 5).
+
+A dense vector is stored as (a) its non-zero values collapsed to the front
+("zero-free" data) and (b) a 1-bit-per-element binary mask giving the
+original positions.  The mask bits are packed 32-per-uint32 word, so the
+storage overhead is exactly 1 bit/element — the paper's "at most 5%
+overhead assuming 4 IL + 16 FL bits" (1/21).
+
+Everything here is vectorized JAX with static shapes (the value buffer
+keeps the dense length; ``nnz`` says how much of it is live).  The faithful
+element-serial Algorithm-1 scan lives in ``kernels/mask_compress/ref.py``
+as the oracle these vectorized forms are tested against.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+MASK_WORD_BITS = 32
+
+
+class MaskedVector(NamedTuple):
+    """Binary-mask compressed tensor (flat).
+
+    values:  (padded_len,) float32 — non-zeros collapsed to the front,
+             zero-padded tail.
+    mask:    (ceil(padded_len/32),) uint32 — packed position bits.
+    nnz:     () int32 — number of live values.
+    length:  static python int — original dense length.
+    """
+
+    values: jax.Array
+    mask: jax.Array
+    nnz: jax.Array
+    length: int
+
+
+def _pad_to_words(n: int) -> int:
+    return (n + MASK_WORD_BITS - 1) // MASK_WORD_BITS * MASK_WORD_BITS
+
+
+def pack_mask_bits(bits: jax.Array) -> jax.Array:
+    """(n,) bool -> (ceil(n/32),) uint32, bit i of word w = element 32*w+i."""
+    n = bits.shape[0]
+    padded = _pad_to_words(n)
+    b = jnp.zeros((padded,), jnp.uint32).at[:n].set(bits.astype(jnp.uint32))
+    b = b.reshape(-1, MASK_WORD_BITS)
+    shifts = jnp.arange(MASK_WORD_BITS, dtype=jnp.uint32)
+    return (b << shifts).sum(axis=1).astype(jnp.uint32)
+
+
+def unpack_mask_bits(words: jax.Array, length: int) -> jax.Array:
+    """(w,) uint32 -> (length,) bool."""
+    shifts = jnp.arange(MASK_WORD_BITS, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(-1)[:length].astype(jnp.bool_)
+
+
+def mask_encode(x: jax.Array) -> MaskedVector:
+    """Dense (n,) -> binary-mask compressed form (vectorized zero-collapse).
+
+    The zero-collapsing shifter of Fig. 7(c) is realized as a cumsum-scatter:
+    destination index of element i is ``cumsum(bits)[i] - 1`` when live.
+    """
+    x = x.reshape(-1).astype(jnp.float32)
+    n = x.shape[0]
+    bits = x != 0.0
+    dest = jnp.cumsum(bits.astype(jnp.int32)) - 1
+    dest = jnp.where(bits, dest, n)  # dead elements scatter off the end
+    values = jnp.zeros((n,), jnp.float32).at[dest].set(x, mode="drop")
+    return MaskedVector(
+        values=values,
+        mask=pack_mask_bits(bits),
+        nnz=bits.sum().astype(jnp.int32),
+        length=n,
+    )
+
+
+def mask_decode(mv: MaskedVector) -> jax.Array:
+    """Compressed form -> dense (length,)."""
+    bits = unpack_mask_bits(mv.mask, mv.length)
+    src = jnp.cumsum(bits.astype(jnp.int32)) - 1
+    gathered = mv.values[jnp.clip(src, 0, mv.length - 1)]
+    return jnp.where(bits, gathered, 0.0)
+
+
+def compressed_bits(mv: MaskedVector, value_bits: int) -> jax.Array:
+    """Total storage bits of the compressed form (paper Fig. 5 accounting)."""
+    return mv.nnz * value_bits + jnp.int32(mv.length)
+
+
+def compression_ratio(mv: MaskedVector, value_bits: int) -> jax.Array:
+    """Dense bits / compressed bits. Fig. 5: 16 elems, 6 nnz, 16b -> 2.29x."""
+    dense = mv.length * value_bits
+    return dense / compressed_bits(mv, value_bits)
+
+
+# ---------------------------------------------------------------------------
+# Tile-occupancy masks: the TPU-granular adaptation of the mask-AND stage.
+# ---------------------------------------------------------------------------
+
+
+def tile_occupancy(dense: jax.Array, tile_m: int, tile_n: int) -> jax.Array:
+    """(M, N) -> (M/tile_m, N/tile_n) bool; True where the tile has any nnz.
+
+    This is what the ``masked_matmul`` Pallas kernel consumes to skip whole
+    MXU tiles: the AND of activation & weight occupancy decides whether a
+    (m, n, k) grid step issues.  M, N must be tile-divisible (callers pad).
+    """
+    m, n = dense.shape
+    assert m % tile_m == 0 and n % tile_n == 0, (dense.shape, tile_m, tile_n)
+    t = dense.reshape(m // tile_m, tile_m, n // tile_n, tile_n)
+    return jnp.any(t != 0.0, axis=(1, 3))
+
+
+def density(x: jax.Array) -> jax.Array:
+    """Fraction of non-zero elements (1 - sparsity)."""
+    return jnp.mean((x != 0.0).astype(jnp.float32))

@@ -1,0 +1,135 @@
+"""Pre-/post-compute sparsity modules (SPRING P1, paper Figs. 6-7, Alg. 1).
+
+The pre-compute sparsity module takes compressed activations+weights and
+their binary masks and produces *matched* zero-free operand streams for the
+MAC lanes:
+
+  1. mask generation (Fig. 7a): ``out = a_mask AND w_mask``; per-operand
+     filter masks ``a_filter = a_mask XOR out``, ``w_filter = w_mask XOR out``.
+  2. dangling-data filter (Fig. 7b / Algorithm 1): drop non-zeros whose
+     partner at the same index is zero.
+  3. zero-collapsing shifter (Fig. 7c): re-compact the filtered stream.
+
+The post-compute sparsity module re-encodes outputs after the activation
+function so data stays zero-free in on-chip memory.
+
+These are the *functional* (testable) forms.  The MXU-tile-granular kernel
+realization of the same math is ``kernels/masked_matmul``; the faithful
+sequential Algorithm-1 oracle is ``kernels/mask_compress/ref.py``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import (
+    MaskedVector,
+    mask_decode,
+    mask_encode,
+    pack_mask_bits,
+    unpack_mask_bits,
+)
+
+
+class MatchedOperands(NamedTuple):
+    """Output of the pre-compute sparsity module: aligned zero-free streams."""
+
+    a_values: jax.Array  # (n,) float32, matched non-zeros collapsed to front
+    w_values: jax.Array  # (n,) float32, aligned with a_values
+    out_mask: jax.Array  # packed uint32 AND-mask
+    n_matched: jax.Array  # () int32
+
+
+def generate_masks(
+    a_mask: jax.Array, w_mask: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fig. 7(a): output mask = AND; filter masks = XOR with the AND.
+
+    All arguments/results are packed uint32 mask words — the hardware
+    operates on the packed form directly (bitwise gates).
+    """
+    out = a_mask & w_mask
+    a_filter = a_mask ^ out
+    w_filter = w_mask ^ out
+    return out, a_filter, w_filter
+
+
+def _filter_and_collapse(
+    values: jax.Array, own_mask_bits: jax.Array, out_mask_bits: jax.Array
+) -> jax.Array:
+    """Fig. 7(b)+(c) vectorized: drop dangling non-zeros, re-collapse.
+
+    ``values`` is the zero-free stream for one operand; ``own_mask_bits``
+    its dense position bits; ``out_mask_bits`` the AND bits.  An element of
+    the stream survives iff its dense position is set in the AND mask.
+    """
+    n = own_mask_bits.shape[0]
+    # position of each dense index inside the incoming zero-free stream
+    src = jnp.cumsum(own_mask_bits.astype(jnp.int32)) - 1
+    # dense-domain values (0 where own bit unset)
+    dense_vals = jnp.where(own_mask_bits, values[jnp.clip(src, 0, n - 1)], 0.0)
+    # keep only AND-mask survivors, then collapse
+    kept = jnp.where(out_mask_bits, dense_vals, 0.0)
+    dest = jnp.cumsum(out_mask_bits.astype(jnp.int32)) - 1
+    dest = jnp.where(out_mask_bits, dest, n)
+    return jnp.zeros((n,), jnp.float32).at[dest].set(kept, mode="drop")
+
+
+def precompute_sparsity(a: MaskedVector, w: MaskedVector) -> MatchedOperands:
+    """The full pre-compute sparsity module on compressed operands."""
+    assert a.length == w.length, (a.length, w.length)
+    out_words, _, _ = generate_masks(a.mask, w.mask)
+    out_bits = unpack_mask_bits(out_words, a.length)
+    a_bits = unpack_mask_bits(a.mask, a.length)
+    w_bits = unpack_mask_bits(w.mask, w.length)
+    return MatchedOperands(
+        a_values=_filter_and_collapse(a.values, a_bits, out_bits),
+        w_values=_filter_and_collapse(w.values, w_bits, out_bits),
+        out_mask=out_words,
+        n_matched=out_bits.sum().astype(jnp.int32),
+    )
+
+
+def sparse_dot(a: MaskedVector, w: MaskedVector) -> jax.Array:
+    """Dot product evaluated entirely in the zero-free domain.
+
+    Equals ``mask_decode(a) @ mask_decode(w)`` but only touches matched
+    non-zero pairs — the MAC-lane computation of the paper.
+    """
+    m = precompute_sparsity(a, w)
+    return jnp.dot(m.a_values, m.w_values)
+
+
+def postcompute_sparsity(y: jax.Array) -> MaskedVector:
+    """Post-compute sparsity module: re-encode after the activation fn."""
+    return mask_encode(y)
+
+
+def relu_then_encode(y: jax.Array) -> MaskedVector:
+    """Common CNN path: ReLU creates the sparsity the encoder captures."""
+    return postcompute_sparsity(jax.nn.relu(y))
+
+
+# ---------------------------------------------------------------------------
+# Dense-domain convenience forms (used by the model layers, where operands
+# live as ordinary arrays and masks are semantic, e.g. pruning masks).
+# ---------------------------------------------------------------------------
+
+
+def apply_joint_mask(a: jax.Array, w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dense-domain equivalent of the dangling-data filter.
+
+    Zeroing each operand where the other is zero changes nothing
+    mathematically (the products were already zero) — which is exactly why
+    SPRING can skip them.  Returned values are what the MAC lanes 'see'.
+    """
+    joint = (a != 0.0) & (w != 0.0)
+    return jnp.where(joint, a, 0.0), jnp.where(joint, w, 0.0)
+
+
+def mask_words_from_dense(x: jax.Array) -> jax.Array:
+    """Packed occupancy mask of a dense array (flattened)."""
+    return pack_mask_bits((x.reshape(-1) != 0.0))

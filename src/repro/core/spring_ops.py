@@ -1,0 +1,192 @@
+"""Public SPRING compute ops: quantized, sparsity-aware matmul/conv.
+
+Every linear/conv layer in the model zoo funnels through these.  Three
+modes (``SpringMode``):
+
+  dense        — plain bf16/fp32 baseline (the 'GPU' reference numerics).
+  quant        — Q(IL,FL) fixed-point operands, fp32 accumulate, stochastic
+                 rounding on the output (paper P2; training-safe via STE).
+  quant_sparse — quant + binary-mask sparsity: dangling non-zeros are
+                 filtered (numerics identical to quant with masked
+                 operands) and, on TPU, all-zero MXU tiles are skipped by
+                 the ``masked_matmul`` Pallas kernel (paper P1).
+
+On CPU (this container, and the 512-host-device dry-run) the quant_sparse
+path lowers to the vectorized jnp equivalent — Pallas-for-TPU cannot lower
+on the CPU backend, and interpret-mode callbacks would poison
+``cost_analysis``.  ``use_pallas=True`` (default on TPU) selects the kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixedpoint import (
+    SPRING_FORMAT,
+    FixedPointFormat,
+    ste_quantize_nearest,
+    ste_quantize_stochastic,
+)
+
+SpringMode = Literal["dense", "quant", "quant_sparse"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpringConfig:
+    """Numerics configuration threaded through every model layer."""
+
+    mode: SpringMode = "dense"
+    fmt: FixedPointFormat = SPRING_FORMAT
+    # Deterministic rounding for activations on the fwd of *inference*;
+    # training always uses SR (the paper's convergence argument).
+    stochastic: bool = True
+    # Kernel dispatch: Pallas on TPU, jnp elsewhere.
+    use_pallas: bool = False
+    # Compute dtype of the dense baseline path.
+    dense_dtype: jnp.dtype = jnp.bfloat16
+    # §Perf levers for the quantized path:
+    #  - weights updated by the SR fixed-point optimizer are ALREADY on the
+    #    Q-grid: skip their runtime re-quantization (identity op)
+    #  - operands can round-to-nearest (no RNG hash); SR stays on the MAC
+    #    output, which is where the paper's convergence argument lives
+    weights_pre_quantized: bool = False
+    operand_rounding: str = "stochastic"  # "stochastic" | "nearest"
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.mode != "dense"
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.mode == "quant_sparse"
+
+
+DENSE = SpringConfig(mode="dense")
+QUANT = SpringConfig(mode="quant")
+QUANT_SPARSE = SpringConfig(mode="quant_sparse")
+
+
+class KeyGen:
+    """Deterministic per-trace key stream for SR sites.
+
+    Each ``next()`` folds an incrementing counter into the base key, so a
+    model with N rounding sites consumes N distinct, reproducible streams
+    per step without threading keys through every layer signature.
+    """
+
+    def __init__(self, key: Optional[jax.Array]):
+        self._key = key
+        self._counter = 0
+
+    def next(self) -> jax.Array:
+        assert self._key is not None, "quantized mode requires an rng key"
+        k = jax.random.fold_in(self._key, self._counter)
+        self._counter += 1
+        return k
+
+
+def _q(x: jax.Array, cfg: SpringConfig, keys: Optional[KeyGen],
+       role: str = "out") -> jax.Array:
+    """Quantize one tensor onto the grid (STE for gradients).
+
+    role: "act" | "weight" | "out" — weight quantization is skipped when
+    weights_pre_quantized; operands may round-to-nearest (no RNG).
+    """
+    if role == "weight" and cfg.weights_pre_quantized:
+        return x
+    stochastic = cfg.stochastic
+    if role in ("act", "weight") and cfg.operand_rounding == "nearest":
+        stochastic = False
+    if stochastic and keys is not None:
+        return ste_quantize_stochastic(keys.next(), x, cfg.fmt)
+    return ste_quantize_nearest(x, cfg.fmt)
+
+
+def spring_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: SpringConfig = DENSE,
+    keys: Optional[KeyGen] = None,
+    w_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """``x @ w`` under the configured SPRING numerics.
+
+    x: (..., K); w: (K, N); w_mask: optional (K, N) {0,1} pruning mask
+    (the weight-sparsity source for LM archs; CNN activation sparsity
+    arises naturally from ReLU and is captured by the value pattern).
+    """
+    if cfg.mode == "dense":
+        if w_mask is not None:
+            w = w * w_mask.astype(w.dtype)
+        return jnp.matmul(
+            x.astype(cfg.dense_dtype), w.astype(cfg.dense_dtype)
+        ).astype(cfg.dense_dtype)
+
+    xq = _q(x, cfg, keys, role="act")
+    if w_mask is not None:
+        w = w * w_mask.astype(w.dtype)
+    wq = _q(w, cfg, keys, role="weight")
+
+    if cfg.is_sparse and cfg.use_pallas:
+        from repro.kernels.masked_matmul import ops as mm_ops
+
+        y = mm_ops.masked_matmul(xq, wq)
+    else:
+        # fp32 accumulate on the fixed-point grid (DESIGN.md deviation 2).
+        y = jnp.matmul(xq.astype(jnp.float32), wq.astype(jnp.float32))
+
+    # MAC-lane epilogue: stochastic rounding back to the storage format.
+    return _q(y, cfg, keys)
+
+
+def spring_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: SpringConfig = DENSE,
+    keys: Optional[KeyGen] = None,
+    stride: tuple[int, int] = (1, 1),
+    padding: str = "SAME",
+    feature_group_count: int = 1,
+) -> jax.Array:
+    """NHWC conv under SPRING numerics. w: (R, S, Cin/g, Cout)."""
+    if cfg.mode == "dense":
+        return jax.lax.conv_general_dilated(
+            x.astype(cfg.dense_dtype),
+            w.astype(cfg.dense_dtype),
+            window_strides=stride,
+            padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=feature_group_count,
+        ).astype(cfg.dense_dtype)
+
+    xq = _q(x, cfg, keys, role="act")
+    wq = _q(w, cfg, keys, role="weight")
+    y = jax.lax.conv_general_dilated(
+        xq.astype(jnp.float32),
+        wq.astype(jnp.float32),
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=feature_group_count,
+    )
+    return _q(y, cfg, keys)
+
+
+def spring_einsum(
+    spec: str,
+    a: jax.Array,
+    b: jax.Array,
+    cfg: SpringConfig = DENSE,
+    keys: Optional[KeyGen] = None,
+) -> jax.Array:
+    """Einsum under SPRING numerics (attention logits/combines, routing)."""
+    if cfg.mode == "dense":
+        return jnp.einsum(spec, a.astype(cfg.dense_dtype), b.astype(cfg.dense_dtype))
+    aq = _q(a, cfg, keys, role="act")
+    bq = _q(b, cfg, keys, role="act")
+    y = jnp.einsum(spec, aq.astype(jnp.float32), bq.astype(jnp.float32))
+    return _q(y, cfg, keys)

@@ -1,0 +1,10 @@
+"""Deterministic, shard-aware synthetic data pipelines."""
+
+from repro.data.pipeline import (
+    DataConfig,
+    SyntheticImageTask,
+    SyntheticLMStream,
+    make_global_batch,
+)
+
+__all__ = ["DataConfig", "SyntheticImageTask", "SyntheticLMStream", "make_global_batch"]

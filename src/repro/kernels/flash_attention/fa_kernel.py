@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: blockwise-softmax (flash) attention, causal + local.
+
+Not a SPRING contribution per se — SPRING targets conv/FC compute — but
+the assigned LM architectures (32k prefill, recurrentgemma's local
+attention, 500k-token cells) need sub-quadratic-memory attention, and the
+attention einsums are exactly the "MAC lane" hot spot SPRING accelerates,
+so this is where the TPU build spends its FLOPs.
+
+Design: grid (B, H, Sq/BQ, Skv/BK); the kv axis is sequential and carries
+the online-softmax state (running max m, denominator l, accumulator acc)
+in VMEM scratch.  Causal and sliding-window block-skips gate both the MXU
+issue and the HBM->VMEM stream of never-attended kv blocks.  GQA is
+handled in the k/v index maps (q head h reads kv head h // group), so kv
+is never materialized per-q-head.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ = 128
+BK = 128
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    kv_steps: int,
+    causal: bool,
+    window: int | None,
+    sm_scale: float,
+):
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Block-level skip: causal (kv block entirely in the future) and
+    # window (kv block entirely before the attention window).
+    live = True
+    if causal:
+        live = live & (j * BK <= i * BQ + BQ - 1)
+    if window is not None:
+        live = live & (j * BK + BK - 1 >= i * BQ - (window - 1))
+
+    @pl.when(live)
+    def _mac():
+        q = q_ref[0, 0].astype(jnp.float32)  # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (BK, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+
+        q_idx = i * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+        k_idx = j * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+        mask = jnp.ones((BQ, BK), jnp.bool_)
+        if causal:
+            mask &= q_idx >= k_idx
+        if window is not None:
+            mask &= k_idx > q_idx - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        l_prev = l_scr[:, 0]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Rows with no live key yet keep m == NEG_INF; exp(NEG_INF - NEG_INF)
+        # would be NaN — guard the correction factor.
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = alpha * l_prev + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[:, 0] = m_new
+        l_scr[:, 0] = l_new
+
+    @pl.when(j == kv_steps - 1)
+    def _epilogue():
+        l = l_scr[:, 0]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, H, Sq, D); k/v: (B, HKV, Skv, D); H % HKV == 0.
+
+    Sq, Skv must be multiples of BQ/BK (wrapper pads).  Returns (B,H,Sq,D).
+    """
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0 and sq % BQ == 0 and skv % BK == 0
+    group = h // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d**0.5)
+    grid = (b, h, sq // BQ, skv // BK)
+    kernel = functools.partial(
+        _fa_kernel,
+        kv_steps=grid[3],
+        causal=causal,
+        window=window,
+        sm_scale=sm_scale,
+    )
+    from jax.experimental.pallas import tpu as pltpu
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        )
+    scratch = [
+        pltpu.VMEM((BQ, 1), jnp.float32),
+        pltpu.VMEM((BQ, 1), jnp.float32),
+        pltpu.VMEM((BQ, d), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, BQ, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, BK, d), lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+            pl.BlockSpec((1, 1, BK, d), lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, BQ, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(q, k, v)

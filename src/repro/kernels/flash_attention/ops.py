@@ -1,0 +1,44 @@
+"""Jitted public wrapper: padding + backend dispatch for flash attention."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.fa_kernel import BK, BQ, flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_reference
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """Multi-head attention; q (B,H,Sq,D), k/v (B,HKV,Skv,D) -> (B,H,Sq,D).
+
+    Padded keys land at indices >= Skv and are causally masked for all
+    real queries; padded query rows are sliced away.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return attention_reference(q, k, v, causal=causal, window=window)
+
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    sq_pad = (sq + BQ - 1) // BQ * BQ
+    skv_pad = (skv + BK - 1) // BK * BK
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, window=window, interpret=(impl == "interpret")
+    )
+    return out[:, :, :sq, :]

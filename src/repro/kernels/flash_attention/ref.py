@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: dense softmax attention with causal/window masking."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """q: (B, H, Sq, D); k/v: (B, HKV, Skv, D). fp32 dense softmax."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = h // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d**0.5)
+    kr = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr) * sm_scale
+    q_idx = jnp.arange(sq)[:, None]
+    k_idx = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), jnp.bool_)
+    if causal:
+        mask &= q_idx >= k_idx
+    if window is not None:
+        mask &= k_idx > q_idx - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (can't happen for causal q>=0) -> zeros
+    p = jnp.where(mask.any(axis=-1)[None, None, :, None], p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)

@@ -1,0 +1,47 @@
+"""Jitted wrappers for mask packing / dangling filtering with padding."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mask_compress.mc_kernel import COLS, ROWS, dangling_filter_pallas, mask_pack_pallas
+
+
+def _pad2d(x: jax.Array) -> tuple[jax.Array, int, int]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    block = ROWS * COLS
+    padded = (n + block - 1) // block * block
+    return jnp.pad(flat, (0, padded - n)).reshape(-1, COLS), n, padded
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def mask_pack(x: jax.Array, impl: str = "auto") -> jax.Array:
+    """Flattened packed occupancy mask words for any-shaped ``x``."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    x2d, n, _ = _pad2d(x)
+    if impl == "ref":
+        from repro.core.masking import pack_mask_bits
+
+        return pack_mask_bits(x2d.reshape(-1) != 0.0)
+    words = mask_pack_pallas(x2d, interpret=(impl == "interpret"))
+    return words.reshape(-1)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def dangling_filter(a: jax.Array, w: jax.Array, impl: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """Zero each operand where the other is zero (pre-compute filter)."""
+    assert a.shape == w.shape
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        joint = (a != 0.0) & (w != 0.0)
+        return jnp.where(joint, a, 0.0), jnp.where(joint, w, 0.0)
+    a2d, n, _ = _pad2d(a)
+    w2d, _, _ = _pad2d(w)
+    af, wf = dangling_filter_pallas(a2d, w2d, interpret=(impl == "interpret"))
+    return af.reshape(-1)[:n].reshape(a.shape), wf.reshape(-1)[:n].reshape(w.shape)

@@ -1,0 +1,76 @@
+"""Oracles for the binary-mask machinery, including the *faithful*
+element-serial Algorithm 1 from the paper (sequential scanning and
+filtering mechanism) — the ground truth the vectorized/kernel forms are
+tested against.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def algorithm1_filter(
+    in_data: np.ndarray, output_mask: np.ndarray, filter_mask: np.ndarray
+) -> np.ndarray:
+    """Verbatim Algorithm 1 (paper §3.1).
+
+    in_data: the zero-free value stream of one operand (its non-zeros in
+    order).  output_mask: dense AND-mask bits.  filter_mask: dense bits of
+    this operand's dangling positions (own_mask XOR output_mask).
+    Returns the stream with dangling entries zeroed in place (the
+    zero-collapsing shifter then compacts it — ``collapse_zeros``).
+    """
+    out_data = np.zeros_like(in_data)
+    data_pointer = 0
+    for mask_pointer in range(len(output_mask)):
+        if output_mask[mask_pointer] == 1:
+            out_data[data_pointer] = in_data[data_pointer]
+            data_pointer += 1
+        elif filter_mask[mask_pointer] == 1:
+            out_data[data_pointer] = 0
+            data_pointer += 1
+    return out_data
+
+
+def collapse_zeros(stream: np.ndarray) -> np.ndarray:
+    """Fig. 7(c) zero-collapsing shifter, element-serial."""
+    out = np.zeros_like(stream)
+    p = 0
+    for v in stream:
+        if v != 0:
+            out[p] = v
+            p += 1
+    return out
+
+
+def precompute_module_reference(a_dense: np.ndarray, w_dense: np.ndarray):
+    """Full pre-compute sparsity module, element-serial (oracle).
+
+    Returns (a_matched, w_matched, out_mask_bits): aligned zero-free
+    streams (padded with zeros to dense length) + the AND mask.
+    """
+    a_dense = np.asarray(a_dense, np.float32)
+    w_dense = np.asarray(w_dense, np.float32)
+    a_bits = (a_dense != 0).astype(np.int32)
+    w_bits = (w_dense != 0).astype(np.int32)
+    out_bits = a_bits & w_bits
+    a_filter = a_bits ^ out_bits
+    w_filter = w_bits ^ out_bits
+    a_stream = np.concatenate([a_dense[a_dense != 0], np.zeros(len(a_dense) - (a_dense != 0).sum(), np.float32)])
+    w_stream = np.concatenate([w_dense[w_dense != 0], np.zeros(len(w_dense) - (w_dense != 0).sum(), np.float32)])
+    a_matched = collapse_zeros(algorithm1_filter(a_stream, out_bits, a_filter))
+    w_matched = collapse_zeros(algorithm1_filter(w_stream, out_bits, w_filter))
+    return a_matched, w_matched, out_bits
+
+
+def mask_pack_reference(x: np.ndarray) -> np.ndarray:
+    """(R, C) -> (R, C/32) uint32, bit i of word w = element 32*w+i."""
+    r, c = x.shape
+    bits = (x != 0).astype(np.uint32).reshape(r, c // 32, 32)
+    shifts = np.arange(32, dtype=np.uint32)
+    return (bits << shifts).sum(axis=2).astype(np.uint32)
+
+
+def dangling_filter_reference(a: np.ndarray, w: np.ndarray):
+    joint = (a != 0) & (w != 0)
+    return np.where(joint, a, 0).astype(np.float32), np.where(joint, w, 0).astype(np.float32)

@@ -1,0 +1,83 @@
+"""Jitted public wrapper for the sparsity-aware fixed-point matmul.
+
+Handles padding to MXU tiles, occupancy-mask computation (the packed
+binary masks AND-reduced per tile — SPRING's pre-compute sparsity stage),
+and backend dispatch (pallas | interpret | ref).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_matmul.mm_kernel import BK, BM, BN, masked_matmul_pallas, padded_dims
+from repro.kernels.masked_matmul.ref import masked_matmul_reference
+
+
+def _occupancy(a: jax.Array, tm: int, tn: int) -> jax.Array:
+    m, n = a.shape
+    t = a.reshape(m // tm, tm, n // tn, tn)
+    return jnp.any(t != 0.0, axis=(1, 3)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("il", "fl", "apply_sr", "impl"))
+def masked_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    seed: jax.Array | None = None,
+    *,
+    il: int = 4,
+    fl: int = 16,
+    apply_sr: bool = True,
+    impl: str = "auto",
+) -> jax.Array:
+    """Sparsity-aware ``x @ w`` on the Q(il,fl) grid with SR epilogue.
+
+    x: (M, K) float32 grid values (zeros = skippable); w: (K, N).
+    """
+    if seed is None:
+        seed = jnp.uint32(0)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return masked_matmul_reference(x, w, seed, il=il, fl=fl, apply_sr=apply_sr)
+
+    m, k = x.shape
+    _, n = w.shape
+    m_pad, n_pad, k_pad = padded_dims(m, n, k)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, m_pad - m), (0, k_pad - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, k_pad - k), (0, n_pad - n)))
+    x_occ = _occupancy(xp, BM, BK)
+    w_occ = _occupancy(wp, BK, BN)
+    out = masked_matmul_pallas(
+        xp,
+        wp,
+        x_occ,
+        w_occ,
+        seed,
+        il=il,
+        fl=fl,
+        apply_sr=apply_sr,
+        interpret=(impl == "interpret"),
+    )
+    return out[:m, :n]
+
+
+def tile_skip_fraction(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Fraction of (i,j,k) MXU grid steps skipped for these operands.
+
+    The roofline compute-term scales by (1 - skip_fraction) on TPU; this
+    is the analytically-reportable speedup of the kernel (§Perf).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    m_pad, n_pad, k_pad = padded_dims(m, n, k)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, m_pad - m), (0, k_pad - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, k_pad - k), (0, n_pad - n)))
+    x_occ = _occupancy(xp, BM, BK).astype(jnp.float32)  # (Mi, Kk)
+    w_occ = _occupancy(wp, BK, BN).astype(jnp.float32)  # (Kk, Nj)
+    issued = jnp.einsum("ik,kj->", x_occ, w_occ)
+    total = x_occ.shape[0] * w_occ.shape[0] * w_occ.shape[1]
+    return 1.0 - issued / total

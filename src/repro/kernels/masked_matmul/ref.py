@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the masked matmul kernel.
+
+Dense f32 matmul of the same operands + the identical SR epilogue
+(same counters, same hash).  Tile skipping must not change results —
+the oracle does *not* skip anything, which is the point of the test.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_matmul.mm_kernel import padded_dims
+from repro.kernels.prng import hash_uint32, uniform_from_bits
+
+
+def masked_matmul_reference(
+    x: jax.Array,
+    w: jax.Array,
+    seed: jax.Array,
+    *,
+    il: int = 4,
+    fl: int = 16,
+    apply_sr: bool = True,
+) -> jax.Array:
+    m, k = x.shape
+    _, n = w.shape
+    _, n_pad, _ = padded_dims(m, n, k)
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if not apply_sr:
+        return y
+    eps = 2.0**-fl
+    min_v, max_v = -(2.0**il), 2.0**il - eps
+    xc = jnp.clip(y, min_v, max_v)
+    scaled = xc * jnp.float32(2.0**fl)
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+    gi = jax.lax.broadcasted_iota(jnp.uint32, y.shape, 0)
+    gj = jax.lax.broadcasted_iota(jnp.uint32, y.shape, 1)
+    counter = gi * jnp.uint32(n_pad) + gj
+    u = uniform_from_bits(hash_uint32(counter, seed.astype(jnp.uint32)))
+    rounded = lo + (u < frac).astype(jnp.float32)
+    return jnp.clip(rounded * jnp.float32(eps), min_v, max_v)

@@ -1,0 +1,104 @@
+"""Jitted wrapper for the SSD chunked scan + a vectorized jnp chunked form.
+
+``ssd_scan_jnp`` is the same chunked math as the kernel but batched over
+(B, H) with plain einsums + a short lax.scan over chunks — it lowers on
+any backend (the CPU dry-run path) and serves as the production fallback.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ref import ssd_scan_reference
+from repro.kernels.ssd_scan.ssd_kernel import CHUNK, ssd_scan_pallas
+
+
+def ssd_scan_jnp(x, dt, a, b, c, chunk: int = CHUNK, return_state: bool = False):
+    """Chunked SSD, vectorized. Shapes as in ssd_scan_pallas."""
+    bsz, s, h, p = x.shape
+    _, _, g, n = b.shape
+    group = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = b.astype(jnp.float32).reshape(bsz, nc, chunk, g, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nc, chunk, g, n)
+    bf = jnp.repeat(bf, group, axis=3)  # (B,NC,L,H,N)
+    cf = jnp.repeat(cf, group, axis=3)
+
+    da = dtf * a[None, None, None, :]  # (B,NC,L,H)
+    cum = jnp.cumsum(da, axis=2)
+
+    # Intra-chunk dual form.  Mask the exponent (not the exp) — the upper
+    # triangle has cum[t] - cum[j] > 0, which overflows exp to inf and
+    # would poison the tril multiply with inf * 0 = NaN.
+    scores = jnp.einsum("bclhn,bcjhn->bchlj", cf, bf)
+    cum_h = jnp.moveaxis(cum, 3, 2)  # (B,NC,H,L)
+    diff = cum_h[..., :, None] - cum_h[..., None, :]  # (B,NC,H,L,L)
+    tril = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+    w = jnp.exp(jnp.where(tril, diff, -jnp.inf))  # w[b,c,h,t,j]
+    dt_h = jnp.moveaxis(dtf, 3, 2)  # (B,NC,H,L)
+    s_mat = scores * w * dt_h[..., None, :]
+    y_intra = jnp.einsum("bchlj,bcjhp->bclhp", s_mat, xf)
+
+    # Chunk states and the cross-chunk scan.
+    decay_end = jnp.exp(cum_h[..., -1:] - cum_h)  # (B,NC,H,L)
+    chunk_state = jnp.einsum("bclhn,bchl,bclhp->bchnp", bf, decay_end * dt_h, xf)
+    chunk_decay = jnp.exp(cum_h[..., -1])  # (B,NC,H)
+
+    def scan_fn(h0, inp):
+        cs, cd = inp  # (B,H,N,P), (B,H)
+        h_new = h0 * cd[..., None, None] + cs
+        return h_new, h0
+
+    init = jnp.zeros((bsz, h, n, p), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn, init, (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,NC,H,N,P) state entering each chunk
+
+    y_inter = jnp.einsum("bclhn,bchnp->bclhp", cf, h_prevs) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, sp, h, p)[:, :s]
+    if return_state:
+        # Padded steps carry dt=0 -> decay exp(0)=1 and zero contribution,
+        # so h_final is exactly the state at position S.
+        return y.astype(x.dtype), h_final  # (B, H, N, P)
+    return y.astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("impl", "return_state"))
+def ssd_scan(x, dt, a, b, c, impl: str = "auto", return_state: bool = False):
+    """SSD scan dispatch: pallas (TPU) | interpret | jnp | ref.
+
+    return_state=True (jnp impl only) also returns the final (B,H,N,P)
+    state — the prefill -> decode cache handoff.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if return_state:
+        assert impl == "jnp", "return_state is implemented on the jnp path"
+        return ssd_scan_jnp(x, dt, a, b, c, return_state=True)
+    if impl == "ref":
+        return ssd_scan_reference(x, dt, a, b, c)
+    if impl == "jnp":
+        return ssd_scan_jnp(x, dt, a, b, c)
+    s = x.shape[1]
+    pad = (-s) % CHUNK
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y = ssd_scan_pallas(x, dt, a, b, c, interpret=(impl == "interpret"))
+    return y[:, :s]

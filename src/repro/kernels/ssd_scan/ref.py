@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: naive token-by-token SSD recurrence via lax.scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_reference(
+    x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array
+) -> jax.Array:
+    """Sequential evaluation of h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T,
+    y_t = C_t h_t.  x: (B,S,H,P), dt: (B,S,H), a: (H,), b/c: (B,S,G,N).
+    """
+    bsz, s, h, p = x.shape
+    _, _, g, n = b.shape
+    group = h // g
+    bf = jnp.repeat(b, group, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    cf = jnp.repeat(c, group, axis=2).astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        alpha = jnp.exp(dtt * a[None, :])  # (B,H)
+        state = state * alpha[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bt * dtt[..., None], xt
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    init = jnp.zeros((bsz, h, n, p), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(bf, 1, 0),
+        jnp.moveaxis(cf, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: Mamba-2 SSD (state-space duality) chunked scan.
+
+Assigned architecture ``mamba2-780m`` [arXiv:2405.21060].  The SSD
+recurrence per head (state N, head dim P):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T        (N x P)
+    y_t = C_t @ h_t
+
+is evaluated chunkwise: within a length-L chunk the lower-triangular
+decay-weighted score matrix turns the recurrence into two MXU matmuls
+(the "duality"); across chunks a single (N, P) state carries in VMEM
+scratch along the sequential grid axis.
+
+Grid: (B, H, S/L) with the chunk axis sequential.  B/C are grouped
+(G state-groups, GQA-style): head h reads group h // (H/G) via the
+index map, so grouped B/C are never materialized per head.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *, nchunks: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (L,)
+    a = a_ref[0, 0].astype(jnp.float32)  # scalar, negative
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)  # (L, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)  # (L, N)
+
+    da = dt * a  # (L,) per-step log decay
+    cum = jnp.cumsum(da)  # inclusive
+    l = x.shape[0]
+
+    # Intra-chunk (the dual quadratic form): S[t, j] = (C_t . B_j)
+    #   * exp(cum[t] - cum[j]) * dt[j], masked to j <= t.
+    scores = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)  # (L, L)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    # Mask the exponent: the upper triangle has positive diffs that would
+    # overflow exp to inf (exp(-inf) = 0 is the safe form).
+    diff = jnp.where(t_idx >= j_idx, cum[:, None] - cum[None, :], -jnp.inf)
+    w = jnp.exp(diff)
+    y_intra = jnp.dot(scores * w * dt[None, :], x, preferred_element_type=jnp.float32)
+
+    # Inter-chunk: contribution of the carried state.
+    h0 = state_scr[...]  # (N, P)
+    y_inter = jnp.exp(cum)[:, None] * jnp.dot(cm, h0, preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # State for the next chunk.
+    decay_to_end = jnp.exp(cum[-1] - cum)  # (L,)
+    state_scr[...] = jnp.exp(cum[-1]) * h0 + jnp.dot(
+        (bm * (decay_to_end * dt)[:, None]).T, x, preferred_element_type=jnp.float32
+    )
+
+
+def ssd_scan_pallas(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,) negative; b/c: (B,S,G,N).
+
+    S must be a multiple of CHUNK (wrapper pads).  Returns y: (B,S,H,P).
+    """
+    bsz, s, h, p = x.shape
+    _, _, g, n = b.shape
+    assert s % CHUNK == 0 and h % g == 0
+    group = h // g
+    grid = (bsz, h, s // CHUNK)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    a2d = a.reshape(h, 1)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, nchunks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, CHUNK, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, CHUNK, 1), lambda b_, h_, c_: (b_, c_, h_)),
+            pl.BlockSpec((1, 1), lambda b_, h_, c_: (h_, 0)),
+            pl.BlockSpec((1, CHUNK, 1, n), lambda b_, h_, c_: (b_, c_, h_ // group, 0)),
+            pl.BlockSpec((1, CHUNK, 1, n), lambda b_, h_, c_: (b_, c_, h_ // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, CHUNK, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(x, dt, a2d, b, c)

@@ -1,0 +1,33 @@
+"""Jitted public wrapper for the stochastic-rounding kernel.
+
+Dispatch: Pallas kernel on TPU, interpret-mode kernel when explicitly
+requested (tests), bit-identical jnp reference otherwise (CPU dry-run).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.stochastic_round.ref import sr_reference
+from repro.kernels.stochastic_round.sr_kernel import sr_pallas
+
+
+@partial(jax.jit, static_argnames=("il", "fl", "impl"))
+def stochastic_round(
+    x: jax.Array,
+    seed: jax.Array,
+    *,
+    il: int = 4,
+    fl: int = 16,
+    impl: str = "auto",
+) -> jax.Array:
+    """SR onto Q(il, fl). impl: auto|pallas|interpret|ref."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return sr_pallas(x, seed, il=il, fl=fl, interpret=False)
+    if impl == "interpret":
+        return sr_pallas(x, seed, il=il, fl=fl, interpret=True)
+    return sr_reference(x, seed, il=il, fl=fl)

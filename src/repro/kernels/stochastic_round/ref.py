@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the stochastic-rounding kernel.
+
+Bit-exact mirror of ``sr_kernel``: identical counter layout, identical
+hash, identical clip/floor sequence — so tests can assert exact equality,
+not just closeness.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.prng import hash_uint32, uniform_from_bits
+from repro.kernels.stochastic_round.sr_kernel import BLOCK_COLS, BLOCK_ROWS
+
+BLOCK = BLOCK_ROWS * BLOCK_COLS
+
+
+def sr_reference(x: jax.Array, seed: jax.Array, *, il: int = 4, fl: int = 16) -> jax.Array:
+    orig_shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    padded = (n + BLOCK - 1) // BLOCK * BLOCK
+    flat = jnp.pad(flat, (0, padded - n))
+
+    eps = 2.0**-fl
+    min_v, max_v = -(2.0**il), 2.0**il - eps
+    xc = jnp.clip(flat, min_v, max_v)
+    scaled = xc * jnp.float32(2.0**fl)
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+
+    # Same counter layout as the kernel: counters are contiguous in the
+    # flattened (block, row, col) order, which equals the flat index.
+    counter = jnp.arange(padded, dtype=jnp.uint32)
+    u = uniform_from_bits(hash_uint32(counter, seed.astype(jnp.uint32)))
+    rounded = lo + (u < frac).astype(jnp.float32)
+    out = jnp.clip(rounded * jnp.float32(eps), min_v, max_v)
+    return out[:n].reshape(orig_shape)

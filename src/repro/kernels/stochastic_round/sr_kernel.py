@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: elementwise stochastic rounding to Q(IL, FL).
+
+The SPRING MAC-lane epilogue (paper Fig. 8): wide accumulator values are
+rounded back to the storage fixed-point format with probability
+proportional to fractional proximity (Eq. 4), driven by an in-kernel
+counter-based xorshift PRNG (DESIGN.md deviation 3 — LFSR -> xorshift).
+
+Tiling: the array is flattened and processed in (8, 1024) f32 VMEM blocks
+(sublane x lane aligned); one grid step per block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.prng import hash_uint32, uniform_from_bits
+
+# (sublanes, lanes) per VMEM block — f32-aligned 8x128 multiples.
+BLOCK_ROWS = 8
+BLOCK_COLS = 1024
+BLOCK = BLOCK_ROWS * BLOCK_COLS
+
+
+def _sr_kernel(x_ref, seed_ref, out_ref, *, fl: int, min_v: float, max_v: float):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    scale = jnp.float32(2.0**fl)
+    inv_scale = jnp.float32(2.0**-fl)
+    xc = jnp.clip(x, min_v, max_v)
+    scaled = xc * scale
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+
+    # Per-element global counter: block offset + intra-block linear index.
+    rows = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+    counter = (
+        jnp.uint32(i) * jnp.uint32(BLOCK)
+        + rows * jnp.uint32(BLOCK_COLS)
+        + cols
+    )
+    u = uniform_from_bits(hash_uint32(counter, seed_ref[0, 0]))
+    rounded = lo + (u < frac).astype(jnp.float32)
+    out_ref[...] = jnp.clip(rounded * inv_scale, min_v, max_v)
+
+
+def sr_pallas(
+    x: jax.Array,
+    seed: jax.Array,
+    *,
+    il: int = 4,
+    fl: int = 16,
+    interpret: bool = False,
+) -> jax.Array:
+    """Stochastically round flat-viewable ``x`` (float32) onto Q(il, fl)."""
+    orig_shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    padded = pl.cdiv(n, BLOCK) * BLOCK
+    flat = jnp.pad(flat, (0, padded - n))
+    x2d = flat.reshape(-1, BLOCK_COLS)
+    grid = (x2d.shape[0] // BLOCK_ROWS,)
+
+    eps = 2.0**-fl
+    kernel = functools.partial(
+        _sr_kernel, fl=fl, min_v=-(2.0**il), max_v=2.0**il - eps
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, jnp.float32),
+        interpret=interpret,
+    )(x2d, seed.astype(jnp.uint32).reshape(1, 1))
+    return out.reshape(-1)[:n].reshape(orig_shape)

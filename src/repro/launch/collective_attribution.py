@@ -1,0 +1,68 @@
+"""Attribute collective traffic to model components via HLO metadata —
+the 'profiler' of the dry-run methodology (no wall-clock on CPU; the
+lowered IR is the profile).
+
+  PYTHONPATH=src python -m repro.launch.collective_attribution /tmp/x.hlo
+"""
+
+from __future__ import annotations
+
+import collections
+import re
+import sys
+
+from repro.launch.hlo_analysis import _COLLECTIVES, _shape_bytes
+
+_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(.*?"
+    r'(?:metadata=\{op_name="([^"]*)")?'
+)
+
+
+def _bucket(op_name: str) -> str:
+    """Collapse op_name paths into human buckets."""
+    if not op_name:
+        return "(unattributed)"
+    for key, label in [
+        ("transpose[", "backward"),
+        ("chunked_softmax_xent", "loss/vocab"),
+        ("checkpoint", "layer-remat"),
+        ("bkgqs", "attention-scores"),
+        ("bkgs", "attention-decode"),
+        ("dot_general", "matmul"),
+        ("while", "layer-scan"),
+    ]:
+        if key in op_name:
+            return label
+    parts = [p for p in op_name.split("/") if p and not p.startswith("jit(")]
+    return parts[0] if parts else "(root)"
+
+
+def attribute(hlo_text: str) -> dict[str, dict[str, float]]:
+    out: dict[str, collections.Counter] = collections.defaultdict(collections.Counter)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        kind = next((c for c in _COLLECTIVES if op == c or op.startswith(c + "-start")), None)
+        if kind is None or op.endswith("-done"):
+            continue
+        nm = re.search(r'op_name="([^"]*)"', s)
+        dt = re.search(r"(f32|bf16|f16|s8|u8|s32)\[", shape_str)
+        bucket = f"{_bucket(nm.group(1) if nm else '')}:{dt.group(1) if dt else '?'}"
+        out[kind][bucket] += _shape_bytes(shape_str)
+    return {k: dict(v) for k, v in out.items()}
+
+
+def main():
+    text = open(sys.argv[1]).read()
+    for kind, buckets in attribute(text).items():
+        print(f"\n== {kind} ==")
+        for b, by in sorted(buckets.items(), key=lambda kv: -kv[1])[:12]:
+            print(f"  {by/1e9:8.2f} GB  {b}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,325 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+THE FIRST TWO LINES must run before any other import (jax locks the
+device count on first init): they give this process 512 placeholder host
+devices so ``jax.make_mesh`` can build the production meshes.
+
+Per cell this emits: memory_analysis (fits-on-chip proof), cost_analysis
+(FLOPs/bytes for §Roofline), and the parsed collective-bytes table, as
+JSON consumed by EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+      --shape train_4k --mesh multi --mode dense --out results/q.json
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=512"
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, get_arch  # noqa: E402
+from repro.core.spring_ops import DENSE, QUANT, QUANT_SPARSE  # noqa: E402
+from repro.launch.hlo_analysis import (  # noqa: E402
+    collective_bytes,
+    fusion_adjusted_bytes,
+    memory_summary,
+    roofline_terms,
+)
+from repro.launch.mesh import make_debug_mesh, make_production_mesh  # noqa: E402
+from repro.optim.optimizers import OptimizerConfig  # noqa: E402
+from repro.runtime.train import (  # noqa: E402
+    StepConfig,
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.runtime.tree_sharding import batch_shardings, tree_shardings  # noqa: E402
+
+MODES = {"dense": DENSE, "quant": QUANT, "quant_sparse": QUANT_SPARSE}
+
+
+def _param_counts(arch) -> tuple[float, float]:
+    """(total, active) parameter counts from init shapes (no allocation)."""
+    from repro.models import encdec as ed_mod
+    from repro.models import lm as lm_mod
+
+    init = ed_mod.encdec_init if arch.is_encdec else lm_mod.lm_init
+    shapes = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), arch.config))
+    total = emb = expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if names[-1] == "embedding":
+            emb += n
+        if names[-1] in ("w_gate", "w_up", "w_down"):
+            expert += n
+    # tied embeddings serve as the lm_head -> their matmul IS model compute
+    tied = bool(getattr(arch.config, "tie_embeddings", False)) or arch.is_encdec
+    active = total - (0 if tied else emb)
+    cfg = arch.config
+    moe = getattr(cfg, "moe", None)
+    if moe is not None and expert:
+        active -= expert * (1.0 - moe.top_k / moe.n_experts)
+    return float(total), float(active)
+
+
+def model_flops(arch, shape_name: str) -> float:
+    sh = SHAPES[shape_name]
+    total, active = _param_counts(arch)
+    d_tokens = sh.global_batch * sh.seq_len
+    if arch.is_encdec and sh.kind != "decode":
+        d_tokens = sh.global_batch * (sh.seq_len + arch.config.enc_seq)
+    if sh.kind == "train":
+        return 6.0 * active * d_tokens
+    if sh.kind == "prefill":
+        return 2.0 * active * d_tokens
+    return 2.0 * active * sh.global_batch  # decode: per emitted token
+
+
+def build_mesh(kind: str):
+    if kind == "single":
+        return make_production_mesh(multi_pod=False)
+    if kind == "multi":
+        return make_production_mesh(multi_pod=True)
+    if kind == "debug":
+        return make_debug_mesh()
+    if kind == "debug_multi":
+        return make_debug_mesh(multi_pod=True)
+    raise ValueError(kind)
+
+
+def run_lower(arch, shape_name, mesh, step_cfg, serve_dtype):
+    """Lower one cell (train | prefill | decode) with explicit shardings."""
+    sh = SHAPES[shape_name]
+    mode_quant = step_cfg.spring.is_quantized
+    if sh.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), arch, step_cfg)
+        )
+        batch_shapes = {
+            k: v for k, v in arch.input_specs(shape_name, arch.config).items()
+        }
+        step = make_train_step(arch, step_cfg, mesh=mesh)
+        state_sh = tree_shardings(state_shapes, mesh)
+        batch_sh = batch_shardings(batch_shapes, mesh)
+        return jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        ).lower(state_shapes, batch_shapes)
+
+    from repro.models import encdec as ed_mod
+    from repro.models import lm as lm_mod
+
+    init = ed_mod.encdec_init if arch.is_encdec else lm_mod.lm_init
+    param_shapes = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), arch.config))
+    param_shapes = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, serve_dtype)
+        if s.dtype == jnp.float32 else s, param_shapes)
+    param_sh = tree_shardings(param_shapes, mesh)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    if sh.kind == "prefill":
+        batch_shapes = dict(arch.input_specs(shape_name, arch.config))
+        batch_sh = batch_shardings(batch_shapes, mesh)
+        fn = make_prefill_step(arch, step_cfg, mesh=mesh)
+        out_shapes = jax.eval_shape(fn, param_shapes, batch_shapes, key_spec)
+        out_sh = (None, tree_shardings(out_shapes[1], mesh))
+        return jax.jit(
+            fn, in_shardings=(param_sh, batch_sh, None), out_shardings=out_sh
+        ).lower(param_shapes, batch_shapes, key_spec)
+
+    # decode
+    cache_shapes = arch.cache_specs(
+        shape_name, arch.config,
+        cache_dtype="int8" if step_cfg.int8_cache else None)
+    cache_shapes = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, serve_dtype)
+        if s.dtype == jnp.bfloat16 and mode_quant else s, cache_shapes)
+    cache_sh = tree_shardings(cache_shapes, mesh)
+    tok_shapes = dict(arch.input_specs(shape_name, arch.config))
+    tok_sh = batch_shardings(tok_shapes, mesh)
+    fn = make_decode_step(arch, step_cfg, mesh=mesh)
+    return jax.jit(
+        fn,
+        in_shardings=(param_sh, tok_sh["tokens"], cache_sh, None),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    ).lower(param_shapes, tok_shapes["tokens"], cache_shapes, key_spec)
+
+
+def _unrolled(arch):
+    """Cost-shadow variant: fully unrolled layer scan so cost_analysis and
+    the collective parse see every layer (XLA counts while bodies once)."""
+    import dataclasses
+
+    return dataclasses.replace(
+        arch, config=dataclasses.replace(arch.config, scan_unroll=True)
+    )
+
+
+DEFAULT_TRAIN_MICROBATCH = 8  # grad accumulation: activation memory / 8
+# MoE dispatch buffers replicate tokens x top_k; VLM carries 26B params:
+# these archs need deeper accumulation to fit 16 GB/chip
+# NB: global_batch/microbatch must stay divisible by the DP extent (16),
+# else activations replicate: 256/16 = 16 rows/micro = 1 row per DP shard.
+TRAIN_MICROBATCH_OVERRIDES = {
+    "olmoe-1b-7b": 16, "deepseek-v2-lite-16b": 16, "internvl2-26b": 16,
+}
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
+             microbatch=None, verbose: bool = True, cost_unrolled: bool = True,
+             seq_parallel: bool = False, bf16_logits: bool = False,
+             layout: str = "tp", remat_policy: str = "full",
+             cache_int8: bool = False, quant_opt: bool = False,
+             variant: str = "baseline") -> dict:
+    import dataclasses as _dc
+
+    arch = get_arch(arch_id)
+    sh = SHAPES[shape_name]
+    if microbatch is None and sh.kind == "train":
+        microbatch = TRAIN_MICROBATCH_OVERRIDES.get(arch_id, DEFAULT_TRAIN_MICROBATCH)
+    if bf16_logits and hasattr(arch.config, "bf16_logits"):
+        arch = _dc.replace(arch, config=_dc.replace(arch.config, bf16_logits=True))
+    if remat_policy != "full" and hasattr(arch.config, "remat_policy"):
+        arch = _dc.replace(arch, config=_dc.replace(arch.config, remat_policy=remat_policy))
+    if shape_name in arch.skipped_shapes():
+        return {
+            "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+            "mode": mode, "status": "skipped",
+            "reason": arch.skipped_shapes()[shape_name],
+        }
+    mesh = build_mesh(mesh_kind)
+    n_chips = mesh.devices.size
+    rules_override = ()
+    if seq_parallel:
+        rules_override = (("seq", (("model",), None)),)
+    if layout == "fsdp":
+        # pure DP x FSDP: batch over all mesh axes, no tensor parallelism.
+        # Wins when the model is small relative to the per-step token count
+        # (TP activation all-reduces >> FSDP weight all-gathers).
+        rules_override = rules_override + (
+            ("batch", (("pod", "data", "model"), ("data", "model"))),
+            ("heads", (None,)), ("kv_heads", (None,)),
+            ("mlp_act", (None,)), ("vocab_act", (None,)),
+            ("w_qkv", (None,)), ("w_mlp", (None,)), ("w_vocab", (None,)),
+            ("w_embed", (("data", "model"), ("data",))),
+            ("cache_batch", (("pod", "data", "model"), ("data", "model"), ("data",))),
+            ("cache_seq", (None,)),
+        )
+    spring_cfg = MODES[mode]
+    if quant_opt and spring_cfg.is_quantized:
+        spring_cfg = _dc.replace(spring_cfg, weights_pre_quantized=True,
+                                 operand_rounding="nearest")
+    step_cfg = StepConfig(
+        spring=spring_cfg,
+        optimizer=OptimizerConfig(kind="adamw"),
+        microbatch=microbatch,
+        rules_override=rules_override,
+        int8_cache=cache_int8,
+    )
+    serve_dtype = jnp.bfloat16 if mode == "dense" else jnp.float32
+
+    t0 = time.time()
+    lowered = run_lower(arch, shape_name, mesh, step_cfg, serve_dtype)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    bf16c = (mode == "dense")  # TPU-native bf16 math; CPU legalized it to f32
+    cost = compiled.cost_analysis()
+    mem = memory_summary(compiled.memory_analysis())
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text, bf16_correct=bf16c)
+    adj = fusion_adjusted_bytes(hlo_text, bf16_correct=bf16c)["fusion_adjusted_bytes"]
+
+    # Cost-shadow: recompile with the layer scan unrolled AND the
+    # microbatch scan disabled so per-layer FLOPs/bytes/collectives are
+    # all visible (XLA cost analysis counts while bodies once; per-step
+    # totals are microbatch-invariant).  Memory comes from the real
+    # compile above; cost/collectives come from this one.
+    t_cost_compile = None
+    if cost_unrolled:
+        import dataclasses as _dc
+
+        t0 = time.time()
+        shadow_cfg = _dc.replace(step_cfg, microbatch=None)
+        shadow = run_lower(_unrolled(arch), shape_name, mesh, shadow_cfg, serve_dtype)
+        shadow_c = shadow.compile()
+        t_cost_compile = time.time() - t0
+        cost = shadow_c.cost_analysis()
+        shadow_text = shadow_c.as_text()
+        coll = collective_bytes(shadow_text, bf16_correct=bf16c)
+        adj = fusion_adjusted_bytes(shadow_text, bf16_correct=bf16c)["fusion_adjusted_bytes"]
+        del shadow_c, shadow_text
+
+    mf = model_flops(arch, shape_name)
+    terms = roofline_terms(cost, coll["total"], n_chips, model_flops=mf,
+                           adjusted_bytes=adj)
+
+    result = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind, "mode": mode,
+        "variant": variant,
+        "status": "ok", "n_chips": int(n_chips), "microbatch": microbatch,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost_compile_s": round(t_cost_compile, 1) if t_cost_compile else None,
+        "memory": mem, "collectives": coll, "roofline": terms,
+    }
+    if verbose:
+        print(json.dumps(result, indent=2))
+        print(f"peak bytes/chip (arg+out+temp-alias): {mem['peak_bytes_per_chip_est']/1e9:.3f} GB", file=sys.stderr)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "debug", "debug_multi"])
+    ap.add_argument("--mode", default="dense", choices=list(MODES))
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-unrolled-cost", action="store_true",
+                    help="skip the unrolled cost-shadow compile")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--bf16-logits", action="store_true")
+    ap.add_argument("--layout", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--remat-policy", default="full", choices=["full", "block_io"])
+    ap.add_argument("--cache-int8", action="store_true")
+    ap.add_argument("--quant-opt", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    result = run_cell(args.arch, args.shape, args.mesh, args.mode, args.microbatch,
+                      cost_unrolled=not args.no_unrolled_cost,
+                      seq_parallel=args.seq_parallel, bf16_logits=args.bf16_logits,
+                      layout=args.layout, remat_policy=args.remat_policy,
+                      cache_int8=args.cache_int8, quant_opt=args.quant_opt,
+                      variant=args.variant)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+    return 0 if result["status"] in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Dry-run / §Roofline
+tables.
+
+  PYTHONPATH=src python -m repro.launch.roofline_report results/dryrun
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load_all(d: str) -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        try:
+            out.append(json.load(open(f)))
+        except Exception:
+            pass
+    return out
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(rows: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | chips | peak GB/chip | HLO GFLOP/chip | coll GB/chip (AG/AR/RS/A2A/CP) | compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | skipped | - | {r['reason'][:50]} | - |")
+            continue
+        c = r["collectives"]
+        coll = "/".join(
+            f"{c.get(k,0)/1e9:.1f}" for k in
+            ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"))
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['n_chips']} "
+            f"| {r['memory']['peak_bytes_per_chip_est']/1e9:.2f} "
+            f"| {rl['hlo_flops_per_chip']/1e9:.0f} "
+            f"| {coll} "
+            f"| {r['compile_s']}+{r.get('cost_compile_s') or 0} |")
+    return "\n".join(lines)
+
+
+def roofline_table(rows: list[dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | frac-of-peak | MODEL_FLOPS | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} | {t['collective_s']:.4f} "
+            f"| {t['dominant'].replace('_s','')} | {t['roofline_fraction_of_peak']:.3f} "
+            f"| {t.get('model_flops',0):.3e} | {t.get('useful_flops_ratio',0):.2f} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(rows: list[dict]) -> list[str]:
+    ok = [r for r in rows if r["status"] == "ok" and r["mesh"] == "single"]
+    notes = []
+    if not ok:
+        return notes
+    worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction_of_peak"])
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+    notes.append(f"worst-fraction: {worst['arch']} x {worst['shape']} "
+                 f"(frac {worst['roofline']['roofline_fraction_of_peak']:.3f})")
+    notes.append(f"most-collective-bound: {coll['arch']} x {coll['shape']} "
+                 f"(coll {coll['roofline']['collective_s']:.3f}s)")
+    return notes
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rows = load_all(d)
+    print("## Dry-run table\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(rows, "single"))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(rows, "multi"))
+    print("\n## Hillclimb candidates\n")
+    for n in pick_hillclimb(rows):
+        print("-", n)
+
+
+if __name__ == "__main__":
+    main()

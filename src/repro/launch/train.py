@@ -1,0 +1,135 @@
+"""Training launcher: end-to-end driver (data -> train_step -> checkpoint
+-> resume), runnable on CPU with reduced configs and on a pod with the
+production mesh.
+
+Example (CPU, reduced config, a few hundred steps):
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --reduced --steps 300 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch
+from repro.core.fixedpoint import SPRING_FORMAT
+from repro.core.spring_ops import DENSE, QUANT, QUANT_SPARSE, SpringConfig
+from repro.data.pipeline import DataConfig, SyntheticLMStream
+from repro.optim.optimizers import OptimizerConfig
+from repro.runtime.resilience import StragglerWatchdog
+from repro.runtime.train import StepConfig, TrainState, init_train_state, make_train_step
+
+log = logging.getLogger("repro.train")
+
+MODES = {"dense": DENSE, "quant": QUANT, "quant_sparse": QUANT_SPARSE}
+
+
+def train_loop(
+    arch_id: str = "llama3.2-1b",
+    *,
+    reduced: bool = True,
+    steps: int = 100,
+    batch: int = 8,
+    seq: int = 128,
+    mode: str = "dense",
+    lr: float = 3e-3,
+    fixed_point_weights: bool = False,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 100,
+    log_every: int = 10,
+    mesh=None,
+    seed: int = 0,
+) -> dict:
+    arch = get_arch(arch_id)
+    cfg = arch.reduced() if reduced else arch.config
+    cfg = dataclasses.replace(cfg)  # defensive copy
+    step_cfg = StepConfig(
+        spring=MODES[mode],
+        optimizer=OptimizerConfig(
+            # warmup must not depend on ``steps``: a resumed run would
+            # otherwise follow a different LR schedule than the original
+            kind="adamw", lr=lr, warmup_steps=10,
+            weight_format=SPRING_FORMAT if fixed_point_weights else None,
+        ),
+    )
+
+    class _A:  # arch view with the chosen config (reduced or full)
+        is_encdec = arch.is_encdec
+        config = cfg
+
+        @staticmethod
+        def reduced():
+            return cfg
+
+    data = SyntheticLMStream(DataConfig(seed=seed, vocab=cfg.vocab, seq_len=seq, global_batch=batch))
+    state = init_train_state(jax.random.PRNGKey(seed), _A, step_cfg, reduced=True)
+    start_step = 0
+
+    manager = CheckpointManager(ckpt_dir, every_steps=ckpt_every) if ckpt_dir else None
+    if manager is not None:
+        restored = manager.restore_or_none()
+        if restored is not None:
+            start_step, tree = restored
+            state = TrainState(*tree)
+            log.info("resumed from step %d", start_step)
+
+    step_fn = jax.jit(make_train_step(_A, step_cfg, mesh=mesh), donate_argnums=(0,))
+    watchdog = StragglerWatchdog()
+    losses = []
+    for step in range(start_step, steps):
+        tokens = data.batch(step)
+        watchdog.step_start()
+        state, metrics = step_fn(state, {"tokens": tokens})
+        loss = float(metrics["loss"])
+        watchdog.step_end(step)
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            log.info("step %d loss %.4f grad_norm %.3f", step, loss, float(metrics["grad_norm"]))
+        if manager is not None:
+            manager.maybe_save(step + 1, tuple(state.tree_flatten()[0]),
+                               {"arch": arch_id, "mode": mode})
+    if manager is not None:
+        manager.maybe_save(steps, tuple(state.tree_flatten()[0]),
+                           {"arch": arch_id, "mode": mode}, force=True)
+    return {
+        "first_loss": losses[0] if losses else None,
+        "last_loss": losses[-1] if losses else None,
+        "losses": losses,
+        "slow_steps": sum(1 for e in watchdog.events if e.slow),
+        "state": state,
+    }
+
+
+def main():
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(name)s %(message)s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mode", default="dense", choices=list(MODES))
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--fixed-point-weights", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+    out = train_loop(
+        args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
+        seq=args.seq, mode=args.mode, lr=args.lr,
+        fixed_point_weights=args.fixed_point_weights,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+    )
+    print(f"loss {out['first_loss']:.4f} -> {out['last_loss']:.4f} "
+          f"({args.steps} steps, slow={out['slow_steps']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Foundational layers. Functional style: ``*_init(key,...) -> params`` /
+``*_apply(params, x, ctx, ...)``.  Every matmul funnels through
+``core.spring_ops`` so the paper's numerics (dense | quant | quant_sparse)
+apply uniformly across all architectures (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spring_ops import DENSE, KeyGen, SpringConfig, spring_matmul
+from repro.runtime.sharding import constrain
+
+
+@dataclasses.dataclass
+class SpringContext:
+    """Per-call numerics context threaded through every layer."""
+
+    cfg: SpringConfig = DENSE
+    keys: Optional[KeyGen] = None
+    # Magnitude-pruning ratio for weight sparsity (LM archs; paper §2.2
+    # cites 20-80% weight sparsity).  Masks are derived inline from a
+    # Gaussian-calibrated threshold — no stored mask tensors.
+    prune_ratio: float = 0.0
+    # int8 KV cache (SPRING reduced precision applied to serving state)
+    int8_cache: bool = False
+
+    def maybe_prune(self, w: jax.Array) -> jax.Array:
+        if self.prune_ratio <= 0.0:
+            return w
+        # For w ~ N(0, s): P(|w| < t) = erf(t / (s*sqrt(2)))
+        t = jax.scipy.special.erfinv(jnp.float32(self.prune_ratio)) * math.sqrt(2.0)
+        std = jnp.std(w.astype(jnp.float32)) + 1e-12
+        return jnp.where(jnp.abs(w) >= t * std, w, 0.0).astype(w.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, scale: float | None = None):
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    p = {"kernel": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense_apply(
+    params,
+    x: jax.Array,
+    ctx: SpringContext,
+    *,
+    w_logical: tuple = (None, None),
+    out_logical: Optional[tuple] = None,
+) -> jax.Array:
+    w = constrain(params["kernel"], w_logical)
+    w = ctx.maybe_prune(w)
+    shape = x.shape
+    y = spring_matmul(x.reshape(-1, shape[-1]), w, ctx.cfg, ctx.keys)
+    y = y.reshape(*shape[:-1], w.shape[-1])
+    if "bias" in params:
+        y = (y + params["bias"].astype(y.dtype)).astype(y.dtype)
+    if out_logical is not None:
+        y = constrain(y, out_logical)
+    return y
+
+
+def embed_init(key, vocab: int, d: int):
+    return {"embedding": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed_apply(params, tokens: jax.Array, ctx: SpringContext) -> jax.Array:
+    emb = constrain(params["embedding"], ("w_vocab", "w_embed"))
+    # quantized modes carry fp32 activations (the Q4.16 grid does not fit
+    # in bf16); dense mode uses the configured compute dtype.
+    act_dtype = jnp.float32 if ctx.cfg.is_quantized else ctx.cfg.dense_dtype
+    y = jnp.take(emb, tokens, axis=0).astype(act_dtype)
+    return constrain(y, ("batch", "seq", "embed"))
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_apply(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_apply(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings.
+# --------------------------------------------------------------------------
+
+
+def rope_apply(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) int32."""
+    d = x.shape[-1]
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (B,S,D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Feed-forward blocks.
+# --------------------------------------------------------------------------
+
+
+def swiglu_init(key, d: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff),
+        "up": dense_init(k2, d, d_ff),
+        "down": dense_init(k3, d_ff, d),
+    }
+
+
+def swiglu_apply(params, x: jax.Array, ctx: SpringContext) -> jax.Array:
+    g = dense_apply(params["gate"], x, ctx, w_logical=("w_embed", "w_mlp"))
+    u = dense_apply(params["up"], x, ctx, w_logical=("w_embed", "w_mlp"))
+    h = constrain(jax.nn.silu(g.astype(jnp.float32)).astype(g.dtype) * u, ("batch", "seq", "mlp_act"))
+    return dense_apply(params["down"], h, ctx, w_logical=("w_mlp", "w_embed"),
+                       out_logical=("batch", "seq", "embed"))
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, *, bias: bool = True):
+    k1, k2 = jax.random.split(key)
+    return {"fc1": dense_init(k1, d, d_ff, bias=bias), "fc2": dense_init(k2, d_ff, d, bias=bias)}
+
+
+def gelu_mlp_apply(params, x: jax.Array, ctx: SpringContext) -> jax.Array:
+    h = dense_apply(params["fc1"], x, ctx, w_logical=("w_embed", "w_mlp"))
+    h = constrain(jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype), ("batch", "seq", "mlp_act"))
+    return dense_apply(params["fc2"], h, ctx, w_logical=("w_mlp", "w_embed"),
+                       out_logical=("batch", "seq", "embed"))

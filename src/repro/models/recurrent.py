@@ -1,0 +1,125 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Assigned arch recurrentgemma-9b: layers alternate 2 recurrent blocks to 1
+local-attention block.  The recurrent temporal-mixing block is:
+
+    x -> linear_x -> causal conv(4) -> RG-LRU ----\
+    x -> linear_y -> GeLU -----------------------(*)--> linear_out
+
+RG-LRU: r_t = sigmoid(W_r u); i_t = sigmoid(W_i u);
+        a_t = exp(-c * softplus(L) * r_t);
+        h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Train/prefill uses jax.lax.associative_scan (log-depth); decode is the
+single-step recurrence — O(1) state, so long_500k runs for this arch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import SpringContext, dense_apply, dense_init
+from repro.models.ssm import CONV_K, _causal_conv
+from repro.runtime.sharding import constrain
+
+RGLRU_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpec:
+    d_rnn: int  # lru width
+
+
+def rglru_block_init(key, d: int, spec: RGLRUSpec):
+    kx, ky, kr, ki, ko, kl = jax.random.split(key, 6)
+    dr = spec.d_rnn
+    return {
+        "wx": dense_init(kx, d, dr),
+        "wy": dense_init(ky, d, dr),
+        "conv_w": jax.random.normal(kl, (CONV_K, dr), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "w_r": dense_init(kr, dr, dr),
+        "w_i": dense_init(ki, dr, dr),
+        # Lambda init so a^c in [0.9, 0.999] at r=1 (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(jnp.linspace(0.9, 4.0, dr).astype(jnp.float32))),
+        "wo": dense_init(ko, dr, d),
+    }
+
+
+def _rglru_scan(u: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array) -> jax.Array:
+    """Associative scan of h_t = a_t h_{t-1} + b_t over the seq axis.
+
+    u,r,i: (B, S, D) fp32.  Composition: (a2, b2) o (a1, b1) = (a1*a2, a2*b1 + b2).
+    """
+    log_a = -RGLRU_C * jax.nn.softplus(lam) * r  # (B,S,D), negative
+    a = jnp.exp(log_a)
+    gated = i * u
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0)) * gated
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block_apply(
+    params,
+    x: jax.Array,
+    ctx: SpringContext,
+    spec: RGLRUSpec,
+    cache: Optional[dict] = None,
+    return_cache: bool = False,
+):
+    """cache: {"conv": (B, CONV_K-1, d_rnn), "h": (B, d_rnn)}."""
+    b, s, _ = x.shape
+    u = dense_apply(params["wx"], x, ctx, w_logical=("w_embed", "w_mlp"))
+    y_gate = dense_apply(params["wy"], x, ctx, w_logical=("w_embed", "w_mlp"))
+    y_gate = jax.nn.gelu(y_gate.astype(jnp.float32)).astype(x.dtype)
+
+    if cache is None:
+        u_raw = u
+        u = _causal_conv(u, params["conv_w"], params["conv_b"])
+        uf = u.astype(jnp.float32)
+        r = jax.nn.sigmoid(
+            jnp.einsum("bsd,de->bse", uf, params["w_r"]["kernel"])
+        )
+        i = jax.nn.sigmoid(
+            jnp.einsum("bsd,de->bse", uf, params["w_i"]["kernel"])
+        )
+        h = _rglru_scan(uf, r, i, params["lam"])
+        new_cache = None
+        if return_cache:
+            new_cache = {"conv": u_raw[:, s - (CONV_K - 1):].astype(jnp.bfloat16),
+                         "h": h[:, -1].astype(jnp.bfloat16)}
+    else:
+        assert s == 1
+        conv_state = jnp.concatenate([cache["conv"], u.astype(cache["conv"].dtype)], axis=1)
+        uf = ((conv_state.astype(jnp.float32) * params["conv_w"][None]).sum(axis=1) + params["conv_b"])  # (B,dr)
+        r = jax.nn.sigmoid(uf @ params["w_r"]["kernel"])
+        i = jax.nn.sigmoid(uf @ params["w_i"]["kernel"])
+        log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * r
+        a = jnp.exp(log_a)
+        h1 = a * cache["h"].astype(jnp.float32) + jnp.sqrt(
+            jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0)
+        ) * (i * uf)
+        h = h1[:, None, :]
+        new_cache = {"conv": conv_state[:, 1:], "h": h1.astype(cache["h"].dtype)}
+
+    h = constrain(h.astype(x.dtype), ("batch", "seq", "mlp_act"))
+    out = dense_apply(params["wo"], h * y_gate, ctx, w_logical=("w_mlp", "w_embed"),
+                      out_logical=("batch", "seq", "embed"))
+    return out, new_cache
+
+
+def rglru_init_cache(batch: int, spec: RGLRUSpec, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, spec.d_rnn), dtype),
+        "h": jnp.zeros((batch, spec.d_rnn), dtype),
+    }

@@ -1,0 +1,126 @@
+"""Mamba-2 block (SSD) [arXiv:2405.21060] — assigned arch mamba2-780m.
+
+Structure per block: in_proj -> split(z, xBC, dt); short causal depthwise
+conv over xBC; SSD scan (kernels/ssd_scan: Pallas on TPU, chunked jnp
+elsewhere); gated RMSNorm(y * silu(z)); out_proj.  Decode keeps a
+(conv_state, ssm_state) pair per layer — O(1) in sequence length, which
+is what makes the long_500k cell runnable for this arch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.models.layers import SpringContext, dense_apply, dense_init, rmsnorm_apply, rmsnorm_init
+from repro.runtime.sharding import constrain
+
+CONV_K = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_inner: int  # = n_heads * head_dim
+    n_heads: int
+    d_state: int = 128
+    n_groups: int = 1
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def ssm_init(key, d: int, spec: SSMSpec):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * spec.d_inner + 2 * spec.n_groups * spec.d_state + spec.n_heads
+    return {
+        "in_proj": dense_init(k1, d, proj_out),
+        "conv_w": jax.random.normal(k2, (CONV_K, spec.conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((spec.conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, spec.n_heads).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((spec.n_heads,), jnp.float32),
+        "d_skip": jnp.ones((spec.n_heads,), jnp.float32),
+        "norm": rmsnorm_init(spec.d_inner),
+        "out_proj": dense_init(k3, spec.d_inner, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width CONV_K, via shifted adds. x: (B,S,C)."""
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(CONV_K):
+        shift = CONV_K - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[i]
+    return (out + b).astype(x.dtype)
+
+
+def ssm_apply(
+    params,
+    x: jax.Array,
+    ctx: SpringContext,
+    spec: SSMSpec,
+    cache: Optional[dict] = None,
+    return_cache: bool = False,
+):
+    """cache: {"conv": (B, CONV_K-1, conv_dim), "ssm": (B, H, N, P)}."""
+    b, s, _ = x.shape
+    di, h, n, g = spec.d_inner, spec.n_heads, spec.d_state, spec.n_groups
+    p = spec.head_dim
+
+    zxbcdt = dense_apply(params["in_proj"], x, ctx, w_logical=("w_embed", "w_mlp"))
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, di + spec.conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["a_log"])  # (H,)
+
+    if cache is None:
+        xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+        xs, bm, cm = jnp.split(xbc, [di, di + g * n], axis=-1)
+        xs = constrain(xs.reshape(b, s, h, p), ("batch", "seq", "heads", None))
+        if return_cache:
+            y, final_state = ssd_scan(xs, dt, a, bm.reshape(b, s, g, n), cm.reshape(b, s, g, n),
+                                      impl="jnp", return_state=True)
+            new_cache = {"conv": zxbcdt[:, s - (CONV_K - 1):, di: di + spec.conv_dim].astype(jnp.bfloat16),
+                         "ssm": final_state.astype(jnp.bfloat16)}
+        else:
+            y = ssd_scan(xs, dt, a, bm.reshape(b, s, g, n), cm.reshape(b, s, g, n))
+            new_cache = None
+    else:
+        assert s == 1
+        conv_state = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)], axis=1)  # (B,K,conv)
+        acc = (conv_state.astype(jnp.float32) * params["conv_w"][None]).sum(axis=1) + params["conv_b"]
+        xbc1 = jax.nn.silu(acc).astype(x.dtype)  # (B, conv_dim)
+        xs, bm, cm = jnp.split(xbc1, [di, di + g * n], axis=-1)
+        xs = xs.reshape(b, h, p)
+        bmr = jnp.repeat(bm.reshape(b, g, n), h // g, axis=1)
+        cmr = jnp.repeat(cm.reshape(b, g, n), h // g, axis=1)
+        dt1 = dt[:, 0]  # (B,H)
+        alpha = jnp.exp(dt1 * a[None, :])
+        ssm = cache["ssm"].astype(jnp.float32) * alpha[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bmr * dt1[..., None], xs.astype(jnp.float32)
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", cmr, ssm).reshape(b, 1, h, p)
+        new_cache = {"conv": conv_state[:, 1:], "ssm": ssm.astype(cache["ssm"].dtype)}
+        xs = xs.reshape(b, 1, h, p)
+
+    y = y + params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di)
+    y = rmsnorm_apply(params["norm"], y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = dense_apply(params["out_proj"], y, ctx, w_logical=("w_mlp", "w_embed"),
+                      out_logical=("batch", "seq", "embed"))
+    return out, new_cache
+
+
+def ssm_init_cache(batch: int, spec: SSMSpec, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, spec.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, spec.n_heads, spec.d_state, spec.head_dim), dtype),
+    }

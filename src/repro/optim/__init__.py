@@ -1,0 +1,23 @@
+"""Optimizers with SPRING reduced-precision weight updates."""
+
+from repro.optim.optimizers import (
+    OptState,
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    make_optimizer,
+    sgdm_init,
+    sgdm_update,
+)
+
+__all__ = [
+    "OptState",
+    "OptimizerConfig",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "make_optimizer",
+    "sgdm_init",
+    "sgdm_update",
+]

@@ -1,0 +1,92 @@
+"""Gradient compression for the inter-pod data-parallel reduction.
+
+SPRING's own pillars applied to the *collective* roofline term: gradients
+crossing the (slowest) pod-to-pod links are sent as stochastically-rounded
+int8 with per-tensor scales and an error-feedback memory (Seide et al.'15
+/ 1-bit Adam lineage; the SR quantizer is the paper's Eq. 4 on a dynamic
+grid).  Wire bytes drop 2x vs bf16 / 4x vs fp32; EF makes the compression
+error O(1/steps) instead of accumulating.
+
+Mechanics: a ring all-reduce cannot sum int8 without overflow, so the
+compressed exchange is all_gather(int8) + local dequant-sum — int8 is
+what moves on the wire.  Used under ``jax.shard_map`` manual over the
+``pod`` axis with data/model axes left to GSPMD (runtime/train.py).
+
+The binary-mask (P1) compression is storage-side only: collectives need
+static shapes, so value-dropping masks cannot shrink an all-reduce on
+TPU — recorded in DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sr_quantize_int8(x: jax.Array, key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Stochastic-rounding int8 quantization with per-tensor scale."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    scaled = xf / scale
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    q = lo + (u < frac).astype(jnp.float32)
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_allreduce_mean(
+    x: jax.Array, axis_name: str, key: jax.Array, ef: Optional[jax.Array] = None
+) -> tuple[jax.Array, jax.Array]:
+    """Mean over ``axis_name`` with int8-on-the-wire + error feedback.
+
+    Returns (mean, new_error_feedback).  Call under shard_map manual over
+    ``axis_name``.
+    """
+    local = x.astype(jnp.float32) + (0.0 if ef is None else ef)
+    q, scale = sr_quantize_int8(local, key)
+    new_ef = local - dequantize_int8(q, scale)
+    # int8 payload crosses the link; scales are negligible (1 f32 each)
+    all_q = jax.lax.all_gather(q, axis_name)  # (P, ...)
+    all_s = jax.lax.all_gather(scale, axis_name)  # (P,)
+    total = jnp.tensordot(all_s, all_q.astype(jnp.float32), axes=(0, 0))
+    n = jax.lax.psum(1, axis_name)
+    return total / n, new_ef
+
+
+def compressed_allreduce_tree(
+    grads: Any, axis_name: str, key: jax.Array, ef_tree: Optional[Any] = None
+) -> tuple[Any, Any]:
+    """Tree version with independent keys / EF buffers per leaf."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    efs = (
+        jax.tree_util.tree_leaves(ef_tree)
+        if ef_tree is not None
+        else [None] * len(leaves)
+    )
+    keys = jax.random.split(key, len(leaves))
+    outs, new_efs = [], []
+    for leaf, e, k in zip(leaves, efs, keys):
+        o, ne = compressed_allreduce_mean(leaf, axis_name, k, e)
+        outs.append(o.astype(leaf.dtype))
+        new_efs.append(ne)
+    return (
+        jax.tree_util.tree_unflatten(treedef, outs),
+        jax.tree_util.tree_unflatten(treedef, new_efs),
+    )
+
+
+def compression_wire_bytes(grads: Any, n_pods: int) -> dict[str, float]:
+    """Accounting helper for EXPERIMENTS.md: bytes/chip crossing pod links."""
+    n = sum(x.size for x in jax.tree_util.tree_leaves(grads))
+    return {
+        "fp32_ring": 2 * (n_pods - 1) / n_pods * n * 4,
+        "bf16_ring": 2 * (n_pods - 1) / n_pods * n * 2,
+        "int8_gather": (n_pods - 1) * n * 1,
+    }

@@ -1,0 +1,133 @@
+"""Logical-axis sharding rules (DP + FSDP + TP + EP) with divisibility fallback.
+
+Tensors throughout the framework are annotated with *logical* axis names;
+a rules table maps logical axes to mesh axes.  ``logical_to_spec`` drops a
+mesh axis whenever the corresponding dimension is not divisible by the
+mesh-axis extent — the tensor is replicated along that axis instead of
+mis-sharded.  This keeps every (arch x shape x mesh) cell compileable
+(e.g. minitron's 24 q-heads on a model=16 axis) while the roofline table
+surfaces the cost of the fallback, which is exactly what the §Perf
+hillclimb then optimizes.
+
+Mesh axes:
+  pod    — inter-pod data parallelism (multi-pod mesh only)
+  data   — intra-pod data parallelism for activations, FSDP for weights
+  model  — tensor parallelism (heads / ffn / vocab / experts)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, None, tuple]
+
+# logical axis -> mesh axes (order matters: first existing wins; tuples
+# shard over multiple mesh axes jointly).
+DEFAULT_RULES: dict[str, tuple] = {
+    # activations
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (None,),
+    "embed": (None,),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (None,),
+    "mlp_act": (("model",),),
+    "experts_act": (("model",),),
+    "capacity": (None,),
+    "vocab_act": (("model",),),
+    # weights
+    "w_embed": (("data",),),          # FSDP axis
+    "w_qkv": (("model",),),           # TP axis (flattened heads*head_dim)
+    "w_mlp": (("model",),),
+    "w_vocab": (("model",),),
+    "w_experts": (("model",),),       # expert parallelism
+    "w_state": (None,),
+    # kv-cache
+    "cache_batch": (("pod", "data"), ("data",)),
+    "cache_heads": (("model",),),
+    # decode caches: the seq dim shards over model (flash-decoding-style
+    # split-K) — kv_heads rarely divide the 16-way model axis, seq always
+    # does for the assigned shapes; first-listed rule that divides wins.
+    "cache_seq": (("model",), None),
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict[str, tuple] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Install a mesh + logical rules for ``constrain`` calls in scope."""
+    prev_mesh, prev_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES if rules is None else rules)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev_mesh, prev_rules
+
+
+def override_rules(**updates):
+    """Update rules inside the active context (hillclimb lever)."""
+    _CTX.rules.update(updates)
+
+
+def _mesh_axes_for(logical: Optional[str], dim: int, mesh: Mesh) -> Optional[tuple]:
+    """Resolve one logical axis to mesh axes, honoring divisibility."""
+    if logical is None:
+        return None
+    candidates = _CTX.rules.get(logical, (None,))
+    for cand in candidates:
+        if cand is None:
+            return None
+        axes = tuple(a for a in cand if a in mesh.shape)
+        if not axes:
+            continue
+        extent = 1
+        for a in axes:
+            extent *= mesh.shape[a]
+        if dim % extent == 0:
+            return axes
+    return None
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]], shape: Sequence[int], mesh: Mesh) -> P:
+    """Build a PartitionSpec for ``shape`` from logical axis names."""
+    used: set[str] = set()
+    parts = []
+    for name, dim in zip(logical_axes, shape):
+        axes = _mesh_axes_for(name, dim, mesh)
+        if axes is None or any(a in used for a in axes):
+            parts.append(None)
+        else:
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+    return P(*parts)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint via logical names; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical_axes: Sequence[Optional[str]], shape: Sequence[int], mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical_axes, shape, mesh))
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh

@@ -1,0 +1,111 @@
+"""Infer logical sharding axes for whole pytrees (params / opt state /
+caches) from leaf path names — the in/out_shardings source for jit.
+
+The model code annotates *internal* tensors via ``constrain``; this module
+gives the *boundary* (input/output) tensors matching NamedShardings so
+memory analysis reflects the real resident layout instead of relying on
+GSPMD propagation from the inside out.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.runtime.sharding import logical_to_spec
+
+# (parent, leaf) -> logical axes for the trailing dims.  Leading unit-stack
+# dims (scanned layers) are padded with None automatically.
+_KERNEL_RULES: dict[str, tuple] = {
+    "wq": ("w_embed", "w_qkv"),
+    "wk": ("w_embed", "w_qkv"),
+    "wv": ("w_embed", "w_qkv"),
+    "wo": ("w_qkv", "w_embed"),
+    "wdkv": ("w_embed", None),
+    "wkr": ("w_embed", None),
+    "wuk": (None, "w_qkv"),
+    "wuv": (None, "w_qkv"),
+    "gate": ("w_embed", "w_mlp"),
+    "up": ("w_embed", "w_mlp"),
+    "down": ("w_mlp", "w_embed"),
+    "fc1": ("w_embed", "w_mlp"),
+    "fc2": ("w_mlp", "w_embed"),
+    "in_proj": ("w_embed", "w_mlp"),
+    "out_proj": ("w_mlp", "w_embed"),
+    "wx": ("w_embed", "w_mlp"),
+    "wy": ("w_embed", "w_mlp"),
+    "w_r": (None, "w_mlp"),
+    "w_i": (None, "w_mlp"),
+    "router": ("w_embed", None),
+    "lm_head": ("w_embed", "w_vocab"),
+    "enc_in": ("w_embed", None),
+}
+
+_LEAF_RULES: dict[str, tuple] = {
+    "embedding": ("w_vocab", "w_embed"),
+    # experts: EP over model on dim0 + FSDP over data on the d_model dim
+    "w_gate": ("w_experts", "w_embed", None),
+    "w_up": ("w_experts", "w_embed", None),
+    "w_down": ("w_experts", None, "w_embed"),
+    # caches
+    "k": ("cache_batch", "cache_seq", "cache_heads", "head_dim"),
+    "v": ("cache_batch", "cache_seq", "cache_heads", "head_dim"),
+    "k_ring": ("cache_batch", "cache_seq", "cache_heads", "head_dim"),
+    "v_ring": ("cache_batch", "cache_seq", "cache_heads", "head_dim"),
+    "k_q8": ("cache_batch", "cache_seq", "cache_heads", "head_dim"),
+    "v_q8": ("cache_batch", "cache_seq", "cache_heads", "head_dim"),
+    "k_sc": ("cache_batch", "cache_seq", "cache_heads"),
+    "v_sc": ("cache_batch", "cache_seq", "cache_heads"),
+    "ckv": ("cache_batch", "cache_seq", None),
+    "krope": ("cache_batch", "cache_seq", None),
+    "conv": ("cache_batch", None, "mlp_act"),
+    "ssm": ("cache_batch", "heads", None, None),
+    "h": ("cache_batch", "mlp_act"),
+}
+
+
+def _path_names(path) -> list[str]:
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def logical_axes_for_path(path, shape) -> tuple:
+    names = _path_names(path)
+    leaf = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    axes: Optional[tuple] = None
+    if leaf == "kernel" and parent in _KERNEL_RULES:
+        axes = _KERNEL_RULES[parent]
+    elif leaf in _LEAF_RULES:
+        axes = _LEAF_RULES[leaf]
+    elif leaf == "bias":
+        axes = (None,)
+    if axes is None:
+        axes = (None,) * len(shape)
+    # pad for unit-stacked (scanned) leading dims
+    if len(axes) < len(shape):
+        axes = (None,) * (len(shape) - len(axes)) + tuple(axes)
+    elif len(axes) > len(shape):
+        axes = tuple(axes[-len(shape):])
+    return tuple(axes)
+
+
+def tree_shardings(tree, mesh: Mesh):
+    """NamedSharding pytree for a ShapeDtypeStruct/array pytree."""
+
+    def one(path, leaf):
+        axes = logical_axes_for_path(path, leaf.shape)
+        return NamedSharding(mesh, logical_to_spec(axes, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    """Input batches shard over ('pod','data') on axis 0."""
+
+    def one(path, leaf):
+        axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, logical_to_spec(axes, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, batch)

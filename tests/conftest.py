@@ -1,0 +1,15 @@
+"""Test config: single CPU device (the dry-run sets its own device count
+in a subprocess), moderate hypothesis budgets for the 1-core container."""
+
+import jax
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("ci")
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,53 @@
+"""The paper's seven CNNs: forward smoke at tiny resolution + layer-table
+sanity against published MAC/param counts."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.spring_ops import QUANT_SPARSE, KeyGen
+from repro.models.cnn import PAPER_CNNS, cnn_apply, cnn_init, cnn_layer_table
+from repro.models.layers import SpringContext
+
+# (GMACs, Mparams) from ptflops-style published measurements; NAS cells are
+# documented simplified approximations (DESIGN.md) -> wide tolerance.
+PUBLISHED = {
+    "inception_resnet_v2": (13.2, 55.8, 0.3),
+    "inception_v3": (5.73, 27.2, 0.3),
+    "mobilenet_v2": (0.30, 3.5, 0.2),
+    "nasnet_mobile": (0.56, 5.3, 0.8),
+    "pnasnet_mobile": (0.59, 5.1, 0.8),
+    "resnet152_v2": (11.5, 60.2, 0.2),
+    "vgg19": (19.6, 143.7, 0.1),
+}
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_CNNS))
+def test_layer_table_close_to_published(name):
+    table = cnn_layer_table(PAPER_CNNS[name])
+    gmacs = sum(r.macs for r in table) / 1e9
+    mparams = sum(r.w_elems for r in table) / 1e6
+    ref_g, ref_p, tol = PUBLISHED[name]
+    assert abs(gmacs - ref_g) / ref_g <= tol, f"{name} GMACs {gmacs} vs {ref_g}"
+    assert abs(mparams - ref_p) / ref_p <= tol, f"{name} params {mparams} vs {ref_p}"
+
+
+@pytest.mark.parametrize("name", ["vgg19", "mobilenet_v2", "resnet152_v2"])
+def test_cnn_forward_smoke(name):
+    cnn = PAPER_CNNS[name]
+    hw = 64 if name == "vgg19" else 96
+    params = cnn_init(jax.random.PRNGKey(0), cnn, input_hw=hw)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, hw, hw, 3))
+    logits = cnn_apply(params, cnn, x, SpringContext())
+    assert logits.shape == (2, 1000)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_cnn_quant_sparse_mode():
+    """Full SPRING path (Q4.16 + SR + mask numerics) through a real CNN."""
+    cnn = PAPER_CNNS["mobilenet_v2"]
+    params = cnn_init(jax.random.PRNGKey(0), cnn, input_hw=64)
+    ctx = SpringContext(cfg=QUANT_SPARSE, keys=KeyGen(jax.random.PRNGKey(2)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 64, 3))
+    logits = cnn_apply(params, cnn, x, ctx)
+    assert bool(jnp.all(jnp.isfinite(logits)))

@@ -1,0 +1,83 @@
+"""Property tests for the Q(IL,FL) fixed-point + stochastic rounding core."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.fixedpoint import (
+    SPRING_FORMAT,
+    FixedPointFormat,
+    from_int,
+    quantize_nearest,
+    quantize_stochastic,
+    ste_quantize_nearest,
+    ste_quantize_stochastic,
+    to_int,
+)
+
+FMT_STRAT = st.sampled_from([FixedPointFormat(4, 16), FixedPointFormat(2, 6), FixedPointFormat(4, 8)])
+
+
+@given(FMT_STRAT, st.lists(st.floats(-20, 20, allow_nan=False), min_size=1, max_size=64))
+def test_nearest_on_grid_and_within_half_eps(fmt, vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q = quantize_nearest(x, fmt)
+    # on grid: q * 2^fl is integral
+    scaled = np.asarray(q, np.float64) * 2.0**fmt.fl
+    assert np.allclose(scaled, np.round(scaled), atol=1e-3)
+    # within eps/2 of the clipped input
+    clipped = np.clip(np.asarray(x), fmt.min_value, fmt.max_value)
+    assert np.all(np.abs(np.asarray(q) - clipped) <= fmt.eps / 2 + 1e-7)
+
+
+@given(FMT_STRAT, st.integers(0, 2**31 - 1))
+def test_stochastic_on_grid_and_within_eps(fmt, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (128,), minval=-3.0, maxval=3.0)
+    q = quantize_stochastic(jax.random.fold_in(key, 1), x, fmt)
+    scaled = np.asarray(q, np.float64) * 2.0**fmt.fl
+    assert np.allclose(scaled, np.round(scaled), atol=1e-3)
+    assert np.all(np.abs(np.asarray(q) - np.asarray(x)) < fmt.eps + 1e-7)
+
+
+def test_stochastic_rounding_is_unbiased():
+    """E[SR(x)] = x — the property that makes fixed-point training converge."""
+    fmt = SPRING_FORMAT
+    x = jnp.full((200_000,), 0.5 + 0.37 * fmt.eps)
+    q = quantize_stochastic(jax.random.PRNGKey(3), x, fmt)
+    bias_in_eps = float((q.mean() - x[0]) / fmt.eps)
+    assert abs(bias_in_eps) < 0.01
+    # probability of rounding up ~= fractional part
+    frac_up = float((q > x[0]).mean())
+    assert abs(frac_up - 0.37) < 0.01
+
+
+def test_nearest_rounding_is_biased_where_sr_is_not():
+    fmt = FixedPointFormat(4, 8)
+    x = jnp.full((1000,), 0.5 + 0.3 * fmt.eps)
+    qn = quantize_nearest(x, fmt)
+    assert float(jnp.abs(qn.mean() - x[0])) > 0.25 * fmt.eps  # systematic error
+
+
+def test_ste_gradients_pass_through_in_range():
+    f = lambda x: ste_quantize_nearest(x, SPRING_FORMAT).sum()
+    g = jax.grad(f)(jnp.asarray([0.5, -1.25, 100.0, -100.0]))
+    np.testing.assert_allclose(np.asarray(g), [1.0, 1.0, 0.0, 0.0])
+
+    f2 = lambda x: ste_quantize_stochastic(jax.random.PRNGKey(0), x, SPRING_FORMAT).sum()
+    g2 = jax.grad(f2)(jnp.asarray([0.5, 200.0]))
+    np.testing.assert_allclose(np.asarray(g2), [1.0, 0.0])
+
+
+@given(st.integers(0, 1000))
+def test_int_roundtrip(seed):
+    x = quantize_nearest(jax.random.normal(jax.random.PRNGKey(seed), (32,)) * 3)
+    np.testing.assert_allclose(np.asarray(from_int(to_int(x))), np.asarray(x), atol=1e-7)
+
+
+def test_saturation():
+    fmt = SPRING_FORMAT
+    q = quantize_nearest(jnp.asarray([1e9, -1e9]), fmt)
+    np.testing.assert_allclose(np.asarray(q), [fmt.max_value, fmt.min_value])

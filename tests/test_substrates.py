@@ -1,0 +1,207 @@
+"""Optimizers, data pipeline, checkpointing, resilience, sharding rules."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.core.fixedpoint import SPRING_FORMAT
+from repro.data.pipeline import DataConfig, SyntheticLMStream
+from repro.optim.optimizers import OptimizerConfig, adamw_init, adamw_update, clip_by_global_norm, sgdm_init, sgdm_update
+from repro.runtime.resilience import ElasticMeshPolicy, StragglerWatchdog
+
+
+# -- optimizers ---------------------------------------------------------------
+
+
+def test_adamw_matches_reference_step():
+    cfg = OptimizerConfig(kind="adamw", lr=0.1, beta1=0.9, beta2=0.99, eps=1e-8, grad_clip=1e9)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.25])}
+    state = adamw_init(p)
+    new_p, state, _ = adamw_update(cfg, g, state, p)
+    # step 1 with bias correction: update = g/|g| elementwise-ish
+    m = 0.1 * np.asarray([0.5, 0.25])
+    v = 0.01 * np.asarray([0.25, 0.0625])
+    expect = np.asarray([1.0, -2.0]) - 0.1 * (m / 0.1) / (np.sqrt(v / 0.01) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), expect, rtol=1e-5)
+
+
+def test_sgdm_momentum_accumulates():
+    cfg = OptimizerConfig(kind="sgdm", lr=1.0, momentum=0.5, grad_clip=1e9)
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    state = sgdm_init(p)
+    for expect in [-1.0, -2.5, -4.25]:
+        p, state, _ = sgdm_update(cfg, g, state, p)
+        np.testing.assert_allclose(float(p["w"][0]), expect, rtol=1e-6)
+
+
+def test_grad_clipping():
+    g = {"a": jnp.full((4,), 3.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 6.0) < 1e-5
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+
+
+def test_fixed_point_master_weights_stay_on_grid():
+    cfg = OptimizerConfig(kind="sgdm", lr=0.01, weight_format=SPRING_FORMAT, grad_clip=1e9)
+    p = {"w": jnp.asarray([0.5, -0.25])}
+    g = {"w": jnp.asarray([0.111, -0.222])}
+    state = sgdm_init(p)
+    p, state, _ = sgdm_update(cfg, g, state, p, key=jax.random.PRNGKey(0))
+    scaled = np.asarray(p["w"], np.float64) * 2.0**SPRING_FORMAT.fl
+    np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-3)
+
+
+def test_optimizer_converges_on_quadratic():
+    cfg = OptimizerConfig(kind="adamw", lr=0.1, grad_clip=1e9)
+    target = jnp.asarray([3.0, -1.5])
+    p = {"w": jnp.zeros(2)}
+    state = adamw_init(p)
+    loss = lambda p_: jnp.sum((p_["w"] - target) ** 2)
+    for _ in range(300):
+        g = jax.grad(loss)(p)
+        p, state, _ = adamw_update(cfg, g, state, p)
+    assert float(loss(p)) < 1e-2
+
+
+# -- data ---------------------------------------------------------------------
+
+
+def test_data_step_addressable_determinism():
+    s1 = SyntheticLMStream(DataConfig(seed=5, vocab=64, seq_len=16, global_batch=4))
+    s2 = SyntheticLMStream(DataConfig(seed=5, vocab=64, seq_len=16, global_batch=4))
+    np.testing.assert_array_equal(np.asarray(s1.batch(17)), np.asarray(s2.batch(17)))
+    assert not np.array_equal(np.asarray(s1.batch(17)), np.asarray(s1.batch(18)))
+
+
+def test_data_is_learnable_markov():
+    cfg = DataConfig(seed=0, vocab=32, seq_len=64, global_batch=8)
+    s = SyntheticLMStream(cfg)
+    b = np.asarray(s.batch(0))
+    perm = np.asarray(s.perm)
+    follows = (b[:, 1:] == perm[b[:, :-1]]).mean()
+    assert follows > 0.8  # 0.9 nominal - noise
+
+
+# -- checkpointing ------------------------------------------------------------
+
+
+def _tree():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": (jnp.ones(3), jnp.zeros(())),
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_checkpoint_roundtrip_structure_and_values(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t, {"note": "x"})
+    step, t2 = load_checkpoint(str(tmp_path))
+    assert step == 7
+    assert jax.tree_util.tree_structure(t) == jax.tree_util.tree_structure(t2)
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2, every_steps=1)
+    for s in range(1, 6):
+        m.maybe_save(s, _tree())
+    assert m.latest_step() == 5
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    path = os.path.join(str(tmp_path), "step_00000001", "arrays.npz")
+    with open(path, "r+b") as f:
+        f.seek(150)
+        f.write(b"\xde\xad")
+    with pytest.raises(IOError):
+        load_checkpoint(str(tmp_path), 1)
+
+
+def test_checkpoint_remesh_sharding_fn(tmp_path):
+    """Elastic restore: a sharding_fn places arrays on the current mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    save_checkpoint(str(tmp_path), 2, _tree())
+    mesh = jax.make_mesh((1,), ("data",))
+    fn = lambda name, shape: NamedSharding(mesh, P()) if shape else None
+    _, t2 = load_checkpoint(str(tmp_path), sharding_fn=fn)
+    assert bool(jnp.all(t2["params"]["w"] == _tree()["params"]["w"]))
+
+
+def test_checkpoint_torn_write_skipped(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    # a torn (tmp) dir from a preempted writer must be ignored
+    os.makedirs(os.path.join(str(tmp_path), "tmp.step_00000009"))
+    step, _ = load_checkpoint(str(tmp_path))
+    assert step == 1
+
+
+# -- resilience ---------------------------------------------------------------
+
+
+def test_watchdog_flags_stragglers():
+    import time
+
+    events = []
+    w = StragglerWatchdog(threshold=3.0, escalate_after=2,
+                          on_escalate=lambda: events.append("boom"), warmup_steps=0)
+    for i in range(5):
+        w.step_start()
+        time.sleep(0.002)
+        w.step_end(i)
+    w.step_start(); time.sleep(0.05); w.step_end(5)
+    assert w.events[-1].slow
+    w.step_start(); time.sleep(0.05); w.step_end(6)
+    assert events == ["boom"]
+
+
+@given(st.integers(1, 4096))
+def test_elastic_mesh_policy_covers_any_device_count(n):
+    choice = ElasticMeshPolicy(model_parallel=16, prefer_pods=2).choose(n)
+    total = 1
+    for d in choice.shape:
+        total *= d
+    assert total <= n and total >= max(1, n // 2)  # uses most of the fleet
+    assert len(choice.shape) == len(choice.axes)
+
+
+# -- sharding rules -----------------------------------------------------------
+
+
+def test_logical_to_spec_divisibility_fallback():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.sharding import logical_to_spec
+
+    mesh = jax.make_mesh((1,), ("model",))
+    # trivially divisible
+    assert logical_to_spec(("heads",), (16,), mesh) == P("model")
+    mesh2 = jax.make_mesh((1,), ("data",))
+    # axis not in mesh -> replicated
+    assert logical_to_spec(("heads",), (16,), mesh2) == P(None)
+
+
+def test_tree_sharding_rules_match_names():
+    from repro.runtime.tree_sharding import logical_axes_for_path
+
+    class K:  # fake DictKey
+        def __init__(self, key):
+            self.key = key
+
+    axes = logical_axes_for_path((K("mixer"), K("wq"), K("kernel")), (256, 512))
+    assert axes == ("w_embed", "w_qkv")
+    # unit-stacked leading dim gets padded with None
+    axes = logical_axes_for_path((K("unit_0"), K("mixer"), K("wq"), K("kernel")), (4, 256, 512))
+    assert axes == (None, "w_embed", "w_qkv")
+    axes = logical_axes_for_path((K("embed"), K("embedding")), (1000, 64))
+    assert axes == ("w_vocab", "w_embed")
