@@ -1,0 +1,95 @@
+"""Memstash microbenches: compression ratio + stash/restore throughput vs
+activation sparsity, the wire-vs-formula cross-check, and the end-to-end
+gradient overhead of the stash policy on a small conv stack.
+
+Rows:
+  memstash_compress_sNN   us = jitted compress() wall time (1M f32 elems at
+                          NN% sparsity); derived = dense-fp32 / wire-bytes
+                          compression ratio at value_bits=20.
+  memstash_restore_sNN    us = jitted decompress() wall time; derived = max
+                          |roundtrip error| (must be 0: bit-exact).
+  memstash_formula_s50    derived = measured wire bytes / analytical
+                          ``20*d + 1`` bits/elem formula (≈ 1.0).
+  memstash_grad_stash     us = jitted grad step of a 2-conv stack under
+                          policy "stash"; derived = time ratio vs "none"
+                          (the recompute cost memstash pays for memory).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.memstash import (
+    MemstashConfig,
+    compress,
+    decompress,
+    formula_bits_per_elem,
+    wire_bytes,
+)
+from repro.models.cnn import ParamStore, conv
+from repro.models.layers import SpringContext
+
+
+def _time(fn, *args, iters: int = 20) -> float:
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _sparse(key, n: int, sparsity: float) -> jax.Array:
+    x = jax.random.normal(key, (n,))
+    keep = jax.random.uniform(jax.random.fold_in(key, 1), (n,)) > sparsity
+    return x * keep
+
+
+def _grad_time(policy: str) -> float:
+    scfg = MemstashConfig(policy=policy) if policy != "none" else None
+    ctx = SpringContext(memstash=scfg)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 32, 32, 8))
+
+    def stack(store, x_):
+        h = conv(store, ctx, "c0", x_, 16, k=3)
+        h = conv(store, ctx, "c1", h, 16, k=3)
+        return jnp.sum(h * h)
+
+    init_store = ParamStore(key)
+    stack(init_store, x)  # init-on-first-touch materializes params
+    params = init_store.params
+
+    def net(p, x_):
+        return stack(ParamStore(key, p), x_)
+
+    g = jax.jit(jax.grad(net))
+    return _time(g, params, x, iters=10)
+
+
+def rows() -> list[tuple[str, float, float]]:
+    out = []
+    n = 1 << 20
+    key = jax.random.PRNGKey(0)
+    comp = jax.jit(compress)
+    deco = jax.jit(decompress)
+    for sparsity in (0.3, 0.5, 0.7, 0.9):
+        x = _sparse(jax.random.fold_in(key, int(sparsity * 100)), n, sparsity)
+        sv = comp(x)
+        ratio = float(n * 4 / wire_bytes(sv))
+        out.append((f"memstash_compress_s{int(sparsity*100)}", _time(comp, x), ratio))
+        err = float(jnp.max(jnp.abs(deco(sv) - x)))
+        out.append((f"memstash_restore_s{int(sparsity*100)}", _time(deco, sv), err))
+
+    x = _sparse(jax.random.fold_in(key, 50), n, 0.5)
+    sv = comp(x)
+    d = float(sv.nnz) / n
+    formula = n * formula_bits_per_elem(d, 20) / 8.0
+    out.append(("memstash_formula_s50", 0.0, float(wire_bytes(sv)) / formula))
+
+    t_none = _grad_time("none")
+    t_stash = _grad_time("stash")
+    out.append(("memstash_grad_stash", t_stash, t_stash / t_none))
+    return out

@@ -4,6 +4,8 @@
   bench_table1        Table 1 design parameters (echo + derived peaks)
   bench_paper_figs    Figs 11-16 perf / power / energy, train + inference
   bench_compression   Fig 5 binary-mask compression (exact worked example)
+  bench_memstash      compressed activation stash: ratio/throughput vs
+                      sparsity + formula cross-check + grad overhead
   bench_kernels       Pallas-kernel jnp-path microbenches
   bench_sr_training   §6 / Gupta'15 SR-vs-fp32 convergence claim
 
@@ -21,12 +23,14 @@ def main() -> None:
     from benchmarks import (
         bench_compression,
         bench_kernels,
+        bench_memstash,
         bench_paper_figs,
         bench_sr_training,
         bench_table1,
     )
 
-    suites = [bench_table1, bench_paper_figs, bench_compression, bench_kernels]
+    suites = [bench_table1, bench_paper_figs, bench_compression, bench_memstash,
+              bench_kernels]
     if not skip_slow:
         suites.append(bench_sr_training)
 

@@ -14,8 +14,25 @@ from typing import Callable, Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro.memstash.config import MemstashConfig
 from repro.models.encdec import EncDecConfig
 from repro.models.lm import LMConfig
+
+
+def default_memstash(family: str) -> MemstashConfig:
+    """Recommended memstash policy per workload family.
+
+    ``family`` is either the literal ``"cnn"`` (the paper CNN workloads,
+    which are not ArchDefs) or an ``ArchDef.family`` value
+    (dense | hybrid | vlm | moe | ssm | audio) — every LM-side family
+    maps to remat.  CNNs carry genuinely sparse post-ReLU activations, so
+    the compressed stash wins on memory traffic; LM residual streams are
+    dense, where "stash" only buys the 20-vs-32-bit value width
+    (measurable via ``repro.memstash.report``).
+    """
+    if family == "cnn":
+        return MemstashConfig(policy="stash")
+    return MemstashConfig(policy="remat")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -59,20 +59,35 @@ def unpack_mask_bits(words: jax.Array, length: int) -> jax.Array:
     return bits.reshape(-1)[:length].astype(jnp.bool_)
 
 
-def mask_encode(x: jax.Array) -> MaskedVector:
-    """Dense (n,) -> binary-mask compressed form (vectorized zero-collapse).
+def collapse_to_front(flat: jax.Array, bits: jax.Array, capacity_len: int) -> jax.Array:
+    """Fig. 7(c) zero-collapsing shifter as a cumsum-scatter: elements
+    whose ``bits`` are set move to the front of a ``(capacity_len,)``
+    buffer (any dtype); dead — and overflow, when capacity < nnz —
+    elements scatter off the end and drop.  Destination index of element
+    i is ``cumsum(bits)[i] - 1`` when live."""
+    dest = jnp.cumsum(bits.astype(jnp.int32)) - 1
+    dest = jnp.where(bits, dest, capacity_len)
+    return jnp.zeros((capacity_len,), flat.dtype).at[dest].set(flat, mode="drop")
 
-    The zero-collapsing shifter of Fig. 7(c) is realized as a cumsum-scatter:
-    destination index of element i is ``cumsum(bits)[i] - 1`` when live.
-    """
+
+def expand_from_mask(values: jax.Array, bits: jax.Array) -> jax.Array:
+    """Inverse of ``collapse_to_front``: scatter front-collapsed values
+    back to their ``bits`` positions; positions beyond the value buffer's
+    capacity (overflow at compress time) decode as zero."""
+    cap = values.shape[0]
+    src = jnp.cumsum(bits.astype(jnp.int32)) - 1
+    valid = bits & (src < cap)
+    gathered = values[jnp.clip(src, 0, cap - 1)]
+    return jnp.where(valid, gathered, jnp.zeros((), values.dtype))
+
+
+def mask_encode(x: jax.Array) -> MaskedVector:
+    """Dense (n,) -> binary-mask compressed form (vectorized zero-collapse)."""
     x = x.reshape(-1).astype(jnp.float32)
     n = x.shape[0]
     bits = x != 0.0
-    dest = jnp.cumsum(bits.astype(jnp.int32)) - 1
-    dest = jnp.where(bits, dest, n)  # dead elements scatter off the end
-    values = jnp.zeros((n,), jnp.float32).at[dest].set(x, mode="drop")
     return MaskedVector(
-        values=values,
+        values=collapse_to_front(x, bits, n),
         mask=pack_mask_bits(bits),
         nnz=bits.sum().astype(jnp.int32),
         length=n,
@@ -82,9 +97,7 @@ def mask_encode(x: jax.Array) -> MaskedVector:
 def mask_decode(mv: MaskedVector) -> jax.Array:
     """Compressed form -> dense (length,)."""
     bits = unpack_mask_bits(mv.mask, mv.length)
-    src = jnp.cumsum(bits.astype(jnp.int32)) - 1
-    gathered = mv.values[jnp.clip(src, 0, mv.length - 1)]
-    return jnp.where(bits, gathered, 0.0)
+    return expand_from_mask(mv.values, bits)
 
 
 def compressed_bits(mv: MaskedVector, value_bits: int) -> jax.Array:

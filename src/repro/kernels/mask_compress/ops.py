@@ -32,6 +32,20 @@ def mask_pack(x: jax.Array, impl: str = "auto") -> jax.Array:
     return words.reshape(-1)
 
 
+@partial(jax.jit, static_argnames=("length", "impl"))
+def mask_unpack(words: jax.Array, length: int, impl: str = "auto") -> jax.Array:
+    """Packed mask words -> (length,) bool occupancy (``mask_pack`` inverse).
+
+    The unpack is a shift-and-test on the VPU lanes either way, so the
+    "pallas"/"interpret" impls share the vectorized path with "ref" — the
+    switch exists so the memstash restore path mirrors the pack dispatch.
+    """
+    del impl  # single vectorized lowering; see docstring
+    from repro.core.masking import unpack_mask_bits
+
+    return unpack_mask_bits(words.reshape(-1), length)
+
+
 @partial(jax.jit, static_argnames=("impl",))
 def dangling_filter(a: jax.Array, w: jax.Array, impl: str = "auto") -> tuple[jax.Array, jax.Array]:
     """Zero each operand where the other is zero (pre-compute filter)."""

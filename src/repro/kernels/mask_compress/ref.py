@@ -74,3 +74,31 @@ def mask_pack_reference(x: np.ndarray) -> np.ndarray:
 def dangling_filter_reference(a: np.ndarray, w: np.ndarray):
     joint = (a != 0) & (w != 0)
     return np.where(joint, a, 0).astype(np.float32), np.where(joint, w, 0).astype(np.float32)
+
+
+def mask_unpack_reference(words: np.ndarray, length: int) -> np.ndarray:
+    """(W,) uint32 packed words -> (length,) {0,1} bits (mask_pack inverse)."""
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = (words[:, None] >> shifts) & np.uint32(1)
+    return bits.reshape(-1)[:length].astype(np.int32)
+
+
+def stash_roundtrip_reference(x: np.ndarray) -> np.ndarray:
+    """Element-serial memstash oracle: collapse non-zeros behind the packed
+    mask, then re-expand — what ``memstash.compress``/``decompress`` do
+    vectorized.  Returns the reconstructed dense array."""
+    flat = x.reshape(-1)
+    stream = np.zeros_like(flat)
+    p = 0
+    for v in flat:
+        if v != 0:
+            stream[p] = v
+            p += 1
+    bits = (flat != 0).astype(np.int32)
+    out = np.zeros_like(flat)
+    q = 0
+    for i, b in enumerate(bits):
+        if b:
+            out[i] = stream[q]
+            q += 1
+    return out.reshape(x.shape)

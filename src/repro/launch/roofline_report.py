@@ -66,6 +66,24 @@ def roofline_table(rows: list[dict], mesh: str = "single") -> str:
     return "\n".join(lines)
 
 
+def memstash_table(results: list[dict]) -> str:
+    """Render ``repro.memstash.report`` JSONs: measured stash traffic per
+    model vs the analytical binary-mask formula (bits/elem = 20*d + 1)."""
+    lines = [
+        "| model | stash points | mean density | dense fp32 MB | wire MB | ratio | wire/formula |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        s = r.get("summary", {})
+        if not s.get("stash_points"):
+            continue
+        lines.append(
+            f"| {r['model']} | {s['stash_points']} | {s['mean_density']:.3f} "
+            f"| {s['dense_fp32_bytes']/1e6:.2f} | {s['wire_bytes']/1e6:.2f} "
+            f"| {s['compression_vs_fp32']:.2f}x | {s['wire_vs_formula']:.4f} |")
+    return "\n".join(lines)
+
+
 def pick_hillclimb(rows: list[dict]) -> list[str]:
     ok = [r for r in rows if r["status"] == "ok" and r["mesh"] == "single"]
     notes = []
@@ -92,6 +110,12 @@ def main():
     print("\n## Hillclimb candidates\n")
     for n in pick_hillclimb(rows):
         print("-", n)
+    # memstash accounting lives next to the dry-run dir (results/memstash)
+    ms_dir = os.path.join(os.path.dirname(os.path.normpath(d)) or ".", "memstash")
+    ms_rows = load_all(ms_dir)
+    if ms_rows:
+        print("\n## Memstash (compressed activation stash)\n")
+        print(memstash_table(ms_rows))
 
 
 if __name__ == "__main__":

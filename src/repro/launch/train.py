@@ -21,6 +21,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_arch
 from repro.core.fixedpoint import SPRING_FORMAT
 from repro.core.spring_ops import DENSE, QUANT, QUANT_SPARSE, SpringConfig
+from repro.memstash.config import MemstashConfig
 from repro.data.pipeline import DataConfig, SyntheticLMStream
 from repro.optim.optimizers import OptimizerConfig
 from repro.runtime.resilience import StragglerWatchdog
@@ -41,6 +42,7 @@ def train_loop(
     mode: str = "dense",
     lr: float = 3e-3,
     fixed_point_weights: bool = False,
+    stash: str = "none",  # memstash policy: none | remat | stash
     ckpt_dir: str | None = None,
     ckpt_every: int = 100,
     log_every: int = 10,
@@ -50,8 +52,21 @@ def train_loop(
     arch = get_arch(arch_id)
     cfg = arch.reduced() if reduced else arch.config
     cfg = dataclasses.replace(cfg)  # defensive copy
+    if stash != "none":
+        if hasattr(cfg, "remat_policy"):
+            if stash == "stash":
+                # route the residual-stream checkpoints through the memstash
+                # subsystem (compressed activation store; DESIGN.md §4.3)
+                cfg = dataclasses.replace(cfg, remat_policy="stash")
+            else:  # "remat": force plain recompute even if the config
+                # (e.g. a reduced variant) disabled remat
+                cfg = dataclasses.replace(cfg, remat=True, remat_policy="full")
+        else:
+            log.warning("--stash %s has no effect for %s (config has no remat_policy)",
+                        stash, arch_id)
     step_cfg = StepConfig(
         spring=MODES[mode],
+        memstash=MemstashConfig(policy=stash),
         optimizer=OptimizerConfig(
             # warmup must not depend on ``steps``: a resumed run would
             # otherwise follow a different LR schedule than the original
@@ -118,13 +133,15 @@ def main():
     ap.add_argument("--mode", default="dense", choices=list(MODES))
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--fixed-point-weights", action="store_true")
+    ap.add_argument("--stash", default="none", choices=["none", "remat", "stash"],
+                    help="memstash activation-checkpoint policy")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     args = ap.parse_args()
     out = train_loop(
         args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
         seq=args.seq, mode=args.mode, lr=args.lr,
-        fixed_point_weights=args.fixed_point_weights,
+        fixed_point_weights=args.fixed_point_weights, stash=args.stash,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
     )
     print(f"loss {out['first_loss']:.4f} -> {out['last_loss']:.4f} "

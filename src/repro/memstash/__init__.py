@@ -1,0 +1,36 @@
+"""Compressed activation stash: SPRING's RRAM training-memory interface as
+a runnable subsystem (binary-mask compressed forward residuals, restored on
+the backward pass).  See DESIGN.md §4.3."""
+
+from repro.memstash.config import MemstashConfig, REMAT_ALL, STASH_ALL, STASH_POLICIES
+from repro.memstash.format import (
+    StashedActivation,
+    compress,
+    decompress,
+    dense_fp32_bytes,
+    formula_bits_per_elem,
+    logical_bytes,
+    wire_bits,
+    wire_bytes,
+)
+from repro.memstash.instrument import record_stash_traffic, summarize
+from repro.memstash.stash import checkpoint_apply, stash_apply
+
+__all__ = [
+    "MemstashConfig",
+    "REMAT_ALL",
+    "STASH_ALL",
+    "STASH_POLICIES",
+    "StashedActivation",
+    "checkpoint_apply",
+    "compress",
+    "decompress",
+    "dense_fp32_bytes",
+    "formula_bits_per_elem",
+    "logical_bytes",
+    "record_stash_traffic",
+    "stash_apply",
+    "summarize",
+    "wire_bits",
+    "wire_bytes",
+]

@@ -1,0 +1,146 @@
+"""The stash storage format: SPRING binary-mask compression for whole
+activation tensors (paper Fig. 5, extended to arbitrary shapes/dtypes).
+
+A ``StashedActivation`` holds
+
+  values — (capacity_len,) original dtype: non-zeros collapsed to the
+           front (Fig. 7(c) zero-collapsing shifter as a cumsum-scatter),
+           zero-padded tail;
+  mask   — (ceil(n/32),) uint32 packed occupancy bits (1 bit/element);
+  nnz    — () int32 live-value count;
+
+plus static aux data (shape, dtype) so it round-trips through jit,
+``jax.custom_vjp`` residuals and ``lax.scan`` carries.  With the default
+capacity (= dense length) the round trip is bit-exact for any dtype:
+values are stored verbatim, only positions are re-derived from the mask.
+The single canonicalization is ``-0.0 -> +0.0`` (a signed zero compares
+equal to zero so its mask bit is 0) — irrelevant for ReLU activations,
+whose zeros are produced as +0.0.
+
+Byte accounting distinguishes
+
+  logical bytes — the dense tensor at its own dtype (what XLA would keep);
+  wire bytes    — what SPRING's RRAM interface moves: ``nnz * value_bits``
+                  for data + one mask bit per element, i.e. the perfmodel
+                  traffic formula ``bits/elem = value_bits*density + 1``
+                  evaluated at the *measured* density (DESIGN.md §4.3).
+
+``formula_bits_per_elem`` is the single source of that formula; the
+analytical perf model imports it from here.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import (
+    MASK_WORD_BITS,
+    collapse_to_front,
+    expand_from_mask,
+    pack_mask_bits,
+    unpack_mask_bits,
+)
+
+
+def formula_bits_per_elem(density: float, value_bits: int = 20):
+    """Paper Fig. 5 traffic accounting: ``value_bits * density + 1``."""
+    return value_bits * density + 1.0
+
+
+@jax.tree_util.register_pytree_node_class
+class StashedActivation:
+    """Binary-mask compressed tensor; a pytree with static shape/dtype."""
+
+    def __init__(self, values, mask, nnz, shape, dtype):
+        self.values = values
+        self.mask = mask
+        self.nnz = nnz
+        self.shape = tuple(shape)
+        self.dtype = jnp.dtype(dtype)
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.values, self.mask, self.nnz), (self.shape, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, mask, nnz = children
+        shape, dtype = aux
+        return cls(values, mask, nnz, shape, dtype)
+
+    # -- derived quantities ------------------------------------------------
+    @property
+    def n(self) -> int:
+        return int(math.prod(self.shape))
+
+    @property
+    def capacity_len(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def density(self) -> jax.Array:
+        return self.nnz.astype(jnp.float32) / self.n
+
+    @property
+    def overflow(self) -> jax.Array:
+        """Live values dropped because nnz exceeded the capacity buffer."""
+        return jnp.maximum(self.nnz - self.capacity_len, 0)
+
+
+def _capacity_len(n: int, capacity: float) -> int:
+    return n if capacity >= 1.0 else max(1, int(math.ceil(n * capacity)))
+
+
+def compress(x: jax.Array, capacity: float = 1.0) -> StashedActivation:
+    """Dense tensor -> binary-mask compressed stash record."""
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    assert n > 0, "cannot stash an empty tensor"
+    cap = _capacity_len(n, capacity)
+    bits = flat != 0
+    return StashedActivation(
+        values=collapse_to_front(flat, bits, cap),
+        mask=pack_mask_bits(bits),
+        nnz=bits.sum().astype(jnp.int32),
+        shape=shape,
+        dtype=dtype,
+    )
+
+
+def decompress(sv: StashedActivation) -> jax.Array:
+    """Compressed stash record -> dense tensor (bit-exact at capacity 1.0)."""
+    bits = unpack_mask_bits(sv.mask, sv.n)
+    return expand_from_mask(sv.values, bits).reshape(sv.shape)
+
+
+# -- byte accounting ---------------------------------------------------------
+
+
+def logical_bytes(sv: StashedActivation) -> float:
+    """Dense footprint at the tensor's own dtype."""
+    return float(sv.n * sv.dtype.itemsize)
+
+
+def dense_fp32_bytes(sv: StashedActivation) -> float:
+    """Dense fp32 footprint — the paper's GPU-baseline comparison point."""
+    return float(sv.n * 4)
+
+
+def wire_bits(sv: StashedActivation, value_bits: int = 20) -> jax.Array:
+    """Bits SPRING's memory interface moves: data + 1 mask bit/element.
+
+    The mask contribution counts the packed words actually stored
+    (``ceil(n/32)`` uint32s), so this is the measured size of the
+    representation, not the formula — the two are cross-checked in tests.
+    """
+    mask_bits = sv.mask.shape[0] * MASK_WORD_BITS
+    live = jnp.minimum(sv.nnz, sv.capacity_len).astype(jnp.float32)
+    return live * value_bits + mask_bits
+
+
+def wire_bytes(sv: StashedActivation, value_bits: int = 20) -> jax.Array:
+    return wire_bits(sv, value_bits) / 8.0

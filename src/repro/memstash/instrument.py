@@ -1,0 +1,103 @@
+"""Byte-accounting instrumentation for stash points.
+
+A thread-local recorder collects one row per stash point when active.
+Rows need *concrete* values (density is data-dependent), so recording only
+happens for eagerly-executed forwards — under jit/grad tracing the
+activation is a tracer and the hook is a no-op, keeping training free of
+host syncs.  ``repro.memstash.report`` runs models eagerly under
+``record_stash_traffic`` to produce the per-layer tables that feed
+``launch/roofline_report.py`` and README.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+
+from repro.memstash.config import MemstashConfig
+from repro.memstash.format import (
+    compress,
+    dense_fp32_bytes,
+    formula_bits_per_elem,
+    logical_bytes,
+    wire_bytes,
+)
+
+
+class _Recorder(threading.local):
+    def __init__(self):
+        self.rows: Optional[list] = None
+
+
+_REC = _Recorder()
+
+
+@contextlib.contextmanager
+def record_stash_traffic():
+    """Collect stash-point rows from eager forwards run inside the block."""
+    prev = _REC.rows
+    _REC.rows = []
+    try:
+        yield _REC.rows
+    finally:
+        _REC.rows = prev
+
+
+def recording() -> bool:
+    return _REC.rows is not None
+
+
+def maybe_record(name: str, x: jax.Array, scfg: MemstashConfig) -> None:
+    """Record measured compression stats for one stash point (eager only).
+
+    Under jit/grad tracing the activation is a tracer, so only a
+    lightweight trace-time marker is recorded (shape info, no data) —
+    enough for tests to assert a stash point is actually wired into a
+    compiled program without forcing a host sync."""
+    if _REC.rows is None:
+        return
+    if isinstance(x, jax.core.Tracer):
+        _REC.rows.append({"layer": name, "elems": int(x.size),
+                          "dtype": str(x.dtype), "traced": True})
+        return
+    sv = compress(x, capacity=scfg.capacity)
+    n = sv.n
+    nnz = int(sv.nnz)
+    density = nnz / n
+    _REC.rows.append({
+        "layer": name,
+        "elems": n,
+        "nnz": nnz,
+        "density": density,
+        "dtype": str(x.dtype),
+        "logical_bytes": logical_bytes(sv),
+        "dense_fp32_bytes": dense_fp32_bytes(sv),
+        "wire_bytes": float(wire_bytes(sv, scfg.value_bits)),
+        "formula_bytes": n * formula_bits_per_elem(density, scfg.value_bits) / 8.0,
+        "overflow": int(sv.overflow),
+    })
+
+
+def summarize(rows: list) -> dict:
+    """Aggregate per-layer rows into model-level totals (measured rows
+    only; trace-time markers carry no data and are skipped)."""
+    rows = [r for r in rows if not r.get("traced")]
+    if not rows:
+        return {"stash_points": 0}
+    wire = sum(r["wire_bytes"] for r in rows)
+    dense = sum(r["dense_fp32_bytes"] for r in rows)
+    formula = sum(r["formula_bytes"] for r in rows)
+    elems = sum(r["elems"] for r in rows)
+    return {
+        "stash_points": len(rows),
+        "total_elems": elems,
+        "mean_density": sum(r["nnz"] for r in rows) / elems,
+        "dense_fp32_bytes": dense,
+        "wire_bytes": wire,
+        "formula_bytes": formula,
+        "compression_vs_fp32": dense / wire if wire else float("inf"),
+        "wire_vs_formula": wire / formula if formula else float("nan"),
+    }

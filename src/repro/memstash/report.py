@@ -1,0 +1,127 @@
+"""Measure per-layer stash traffic for the paper CNNs and an LM block.
+
+Runs model forwards eagerly under the stash-traffic recorder (ReLU gives
+the CNNs their natural activation sparsity) and writes one JSON per model
+into ``results/memstash/``, which ``launch/roofline_report.py`` renders as
+the memstash table.
+
+  PYTHONPATH=src python -m repro.memstash.report --cnn mobilenet_v2 --hw 96
+  PYTHONPATH=src python -m repro.memstash.report --all-cnns --out results/memstash
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.memstash.config import MemstashConfig
+from repro.memstash.instrument import record_stash_traffic, summarize
+
+
+def measure_cnn_stash(name: str = "mobilenet_v2", hw: int = 96, batch: int = 2,
+                      scfg: MemstashConfig | None = None, seed: int = 0) -> dict:
+    """Per-layer stash accounting for one paper CNN at reduced resolution."""
+    from repro.models.cnn import PAPER_CNNS, cnn_apply, cnn_init
+    from repro.models.layers import SpringContext
+
+    if name not in PAPER_CNNS:
+        raise SystemExit(f"unknown CNN {name!r}; choose from {sorted(PAPER_CNNS)}")
+    cnn = PAPER_CNNS[name]
+    if scfg is None:
+        from repro.configs.base import default_memstash
+
+        scfg = default_memstash("cnn")
+    params = cnn_init(jax.random.PRNGKey(seed), cnn, input_hw=hw)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, hw, hw, 3))
+    ctx = SpringContext(memstash=scfg)
+    with record_stash_traffic() as rows:
+        cnn_apply(params, cnn, x, ctx)
+    return {"model": name, "kind": "cnn", "hw": hw, "batch": batch,
+            "rows": rows, "summary": summarize(rows)}
+
+
+def measure_lm_stash(arch_id: str = "llama3.2-1b", batch: int = 2, seq: int = 64,
+                     scfg: MemstashConfig | None = None, seed: int = 0) -> dict:
+    """Stash accounting for one reduced-LM residual block, run eagerly.
+
+    LM residual streams are dense, so this measures the stash format's
+    graceful-degradation point: ~logical bytes + 1 mask bit/elem.
+    """
+    from repro.configs import get_arch
+    from repro.models import lm as lm_mod
+    from repro.models.layers import SpringContext
+    from repro.memstash.stash import stash_apply
+
+    arch = get_arch(arch_id)
+    cfg = arch.reduced()
+    scfg = scfg or MemstashConfig(policy="stash")
+    params = lm_mod.lm_init(jax.random.PRNGKey(seed), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(seed + 1), (batch, seq), 0, cfg.vocab)
+    ctx = SpringContext(memstash=scfg)
+    x = lm_mod.embed_apply(params["embed"], tokens, ctx)
+    positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+    unit0 = jax.tree_util.tree_map(lambda a: a[0], params["unit_0"])
+    kind = cfg.pattern_unit[0]
+
+    def block(h, aux):
+        out, _, _ = lm_mod.block_apply(aux[0], h, ctx, cfg, kind, positions)
+        return out
+
+    with record_stash_traffic() as rows:
+        stash_apply(block, scfg, f"{arch_id}/unit0", x, (unit0,))
+    return {"model": arch_id, "kind": "lm_block", "batch": batch, "seq": seq,
+            "rows": rows, "summary": summarize(rows)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cnn", action="append", default=[])
+    ap.add_argument("--all-cnns", action="store_true")
+    ap.add_argument("--lm", action="append", default=[])
+    ap.add_argument("--hw", type=int, default=96)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--out", default="results/memstash")
+    args = ap.parse_args()
+
+    jobs = list(args.cnn)
+    if args.all_cnns:
+        from repro.models.cnn import PAPER_CNNS
+
+        jobs = sorted(PAPER_CNNS)
+    if not jobs and not args.lm:
+        jobs = ["mobilenet_v2"]
+
+    os.makedirs(args.out, exist_ok=True)
+    for name in jobs:
+        hw = min(args.hw, 96)  # keep eager CPU forwards tractable
+        if hw != args.hw:
+            print(f"note: --hw {args.hw} clamped to {hw} (eager CPU forwards; "
+                  f"JSONs record the measured resolution)")
+        res = measure_cnn_stash(name, hw=hw, batch=args.batch)
+        path = os.path.join(args.out, f"{name}.json")
+        json.dump(res, open(path, "w"), indent=1)
+        s = res["summary"]
+        if not s.get("stash_points"):
+            print(f"{name}: no stash points recorded (policy resolved everything to none)")
+            continue
+        print(f"{name}: {s['stash_points']} points, density {s['mean_density']:.3f}, "
+              f"{s['dense_fp32_bytes']/1e6:.2f} MB fp32 -> {s['wire_bytes']/1e6:.2f} MB wire "
+              f"({s['compression_vs_fp32']:.2f}x), wire/formula {s['wire_vs_formula']:.4f}")
+    for arch_id in args.lm:
+        res = measure_lm_stash(arch_id, batch=args.batch)
+        path = os.path.join(args.out, f"{arch_id.replace('/', '_')}_block.json")
+        json.dump(res, open(path, "w"), indent=1)
+        s = res["summary"]
+        if not s.get("stash_points"):
+            print(f"{arch_id} block: no stash points recorded")
+            continue
+        print(f"{arch_id} block: density {s['mean_density']:.3f}, "
+              f"{s['dense_fp32_bytes']/1e6:.2f} MB fp32 -> {s['wire_bytes']/1e6:.2f} MB wire")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.spring_ops import spring_conv2d, spring_matmul
+from repro.memstash.stash import checkpoint_apply
 from repro.models.layers import SpringContext
 
 
@@ -97,12 +98,21 @@ def conv(
     cin = x.shape[-1]
     kh, kw = (k, k) if isinstance(k, int) else k
     w = store.get(name, (kh, kw, cin // groups, cout), scale=(2.0 / (kh * kw * cin)) ** 0.5)
-    y = spring_conv2d(x, w, ctx.cfg, ctx.keys, stride=(stride, stride),
-                      padding=padding, feature_group_count=groups)
     b = store.get(name + "/b", (cout,), 0.0)
-    y = y + b.astype(y.dtype)
-    if relu:
-        y = jax.nn.relu(y)  # the paper's activation-sparsity source
+
+    def body(x_, wb):
+        w_, b_ = wb
+        y_ = spring_conv2d(x_, w_, ctx.cfg, ctx.keys, stride=(stride, stride),
+                           padding=padding, feature_group_count=groups)
+        y_ = y_ + b_.astype(y_.dtype)
+        if relu:
+            y_ = jax.nn.relu(y_)  # the paper's activation-sparsity source
+        return y_
+
+    # The conv input is the previous layer's post-ReLU map — the sparse
+    # tensor the backward dW GEMM re-reads, i.e. SPRING's stash target.
+    y = checkpoint_apply(body, ctx.stash_policy(name, int(x.size)), ctx.memstash,
+                         name, x, (w, b))
     _record(LayerRecord(
         "conv", name,
         macs=int(y.shape[1] * y.shape[2] * cout * (kh * kw * cin // groups)),
@@ -117,10 +127,16 @@ def fc(store: ParamStore, ctx: SpringContext, name: str, x: jax.Array, cout: int
        relu: bool = False) -> jax.Array:
     cin = x.shape[-1]
     w = store.get(name, (cin, cout), scale=(1.0 / cin) ** 0.5)
-    y = spring_matmul(x, w, ctx.cfg, ctx.keys)
-    y = y + store.get(name + "/b", (cout,), 0.0).astype(y.dtype)
-    if relu:
-        y = jax.nn.relu(y)
+    b = store.get(name + "/b", (cout,), 0.0)
+
+    def body(x_, wb):
+        w_, b_ = wb
+        y_ = spring_matmul(x_, w_, ctx.cfg, ctx.keys)
+        y_ = y_ + b_.astype(y_.dtype)
+        return jax.nn.relu(y_) if relu else y_
+
+    y = checkpoint_apply(body, ctx.stash_policy(name, int(x.size)), ctx.memstash,
+                         name, x, (w, b))
     _record(LayerRecord("fc", name, macs=cin * cout, in_elems=cin,
                         w_elems=cin * cout, out_elems=cout))
     return y

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.spring_ops import DENSE, KeyGen, SpringConfig, spring_matmul
+from repro.memstash.config import MemstashConfig
 from repro.runtime.sharding import constrain
 
 
@@ -29,6 +30,15 @@ class SpringContext:
     prune_ratio: float = 0.0
     # int8 KV cache (SPRING reduced precision applied to serving state)
     int8_cache: bool = False
+    # Compressed-activation-stash policy for training (memstash subsystem);
+    # None means every stash point resolves to "none".
+    memstash: Optional[MemstashConfig] = None
+
+    def stash_policy(self, name: str, elems: Optional[int] = None) -> str:
+        """Resolve the checkpoint policy for one named stash point."""
+        if self.memstash is None:
+            return "none"
+        return self.memstash.policy_for(name, elems)
 
     def maybe_prune(self, w: jax.Array) -> jax.Array:
         if self.prune_ratio <= 0.0:

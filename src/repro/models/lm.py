@@ -23,6 +23,9 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
+from repro.core.spring_ops import KeyGen
+from repro.memstash.config import MemstashConfig
+from repro.memstash.stash import stash_apply
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import recurrent as rec_mod
@@ -80,7 +83,11 @@ class LMConfig:
     # §Perf lever: remat policy — "full" recomputes everything; "block_io"
     # saves each block's output (skips re-forwarding through the TP
     # collectives and attention in the backward pass, costing one
-    # activation per layer of memory)
+    # activation per layer of memory); "stash" stores each scan unit's
+    # residual input binary-mask compressed and restores it in backward
+    # (the memstash subsystem — SPRING's RRAM activation store; applies
+    # even with remat=False, since the stash is itself a checkpoint
+    # strategy)
     remat_policy: str = "full"
     # set by configs: families where 500k-token full attention is intractable
     supports_long_context: bool = False
@@ -248,10 +255,49 @@ def lm_hidden(
                 aux_c += a
             return (h, aux_c), None
 
+        # memstash resolution: remat_policy="stash" nominates the residual
+        # stream as a stash point, but the MemstashConfig still has the
+        # last word (per_layer overrides / min_elems / policy "none"),
+        # mirroring how the CNN path routes through ctx.stash_policy
+        scfg = ctx.memstash if ctx.memstash is not None else MemstashConfig(policy="stash")
+        stash_policy = (scfg.policy_for("lm/residual", int(x.size))
+                        if cfg.remat_policy == "stash" else "none")
+
         if cfg.remat and cfg.remat_policy == "block_io":
             policy = jax.checkpoint_policies.save_only_these_names("block_out")
             body_fn = jax.checkpoint(body, policy=policy)
-        elif cfg.remat:
+        elif stash_policy == "stash":
+            # memstash: the unit's residual-stream input is stored
+            # binary-mask compressed and restored for the backward
+            # recompute (dense LM residuals degrade gracefully toward
+            # the 20-vs-32-bit value width; see DESIGN.md §4.3).
+            # Active regardless of cfg.remat — the stash *is* the
+            # checkpointing strategy (compressed-input remat).  Every
+            # traced value the unit needs (positions, SR key) must flow
+            # through aux, not the closure: custom_vjp backward re-traces
+            # inside the scan transpose, where closure-captured tracers
+            # from the forward trace would leak as jaxpr consts.
+            # draw a fresh subkey for the scanned units: reusing the base
+            # key would replay the exact folds embed/prefix SR sites
+            # already consumed (correlated rounding noise)
+            base_key = ctx.keys.next() if ctx.keys is not None else None
+
+            def body_fn(carry, unit_params):
+                h, aux_c = carry
+
+                def unit(h_, aux):
+                    aux_cc, up, pos, k = aux
+                    ctx_u = (dataclasses.replace(ctx, keys=KeyGen(k))
+                             if k is not None else ctx)
+                    for u, kind in enumerate(cfg.pattern_unit):
+                        h_, _, a = block_apply(up[u], h_, ctx_u, cfg, kind, pos)
+                        h_ = checkpoint_name(h_, "block_out")
+                        aux_cc += a
+                    return h_, aux_cc
+
+                return stash_apply(unit, scfg, "lm/residual", h,
+                                   (aux_c, unit_params, positions, base_key)), None
+        elif cfg.remat or stash_policy == "remat":
             body_fn = jax.checkpoint(body)
         else:
             body_fn = body

@@ -27,6 +27,7 @@ import dataclasses
 import math
 from typing import Iterable
 
+from repro.memstash.format import formula_bits_per_elem
 from repro.models.cnn import CNNDef, LayerRecord, cnn_layer_table
 
 
@@ -126,8 +127,10 @@ def spring_eval(
 ) -> AcceleratorResult:
     d_act = 1.0 - act_sparsity
     d_w = 1.0 - w_sparsity
-    bits_act = design.value_bits * d_act + 1.0
-    bits_w = design.value_bits * d_w + 1.0
+    # single source of the binary-mask traffic formula, shared with (and
+    # cross-checked against) the measured memstash wire bytes
+    bits_act = formula_bits_per_elem(d_act, design.value_bits)
+    bits_w = formula_bits_per_elem(d_w, design.value_bits)
     total_t = total_e = 0.0
     mac_mult = 3.0 if training else 1.0  # bwd adds dX and dW GEMMs
     for rec in table:

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.spring_ops import DENSE, KeyGen, SpringConfig
+from repro.memstash.config import MemstashConfig
 from repro.models import encdec as ed_mod
 from repro.models import lm as lm_mod
 from repro.models.layers import SpringContext
@@ -38,6 +39,10 @@ class StepConfig:
     # logical-sharding rule overrides, e.g. (("seq", (("model",), None)),)
     # = sequence-parallel residual (reduce-scatter TP boundaries)
     rules_override: tuple = ()
+    # compressed-activation-stash policy (memstash subsystem); pairs with
+    # LMConfig.remat_policy="stash" for the residual stream and drives the
+    # per-layer conv/fc stash points in the CNN models
+    memstash: MemstashConfig = MemstashConfig()
     # int8 KV cache for serving (SPRING P2 on the cache)
     int8_cache: bool = False
 
@@ -96,7 +101,9 @@ def make_train_step(arch, step_cfg: StepConfig, mesh=None, reduced: bool = False
 
     def ctx_for(key) -> SpringContext:
         keys = KeyGen(key) if step_cfg.spring.is_quantized else None
-        return SpringContext(cfg=step_cfg.spring, keys=keys, prune_ratio=step_cfg.prune_ratio)
+        return SpringContext(cfg=step_cfg.spring, keys=keys,
+                             prune_ratio=step_cfg.prune_ratio,
+                             memstash=step_cfg.memstash)
 
     def grads_and_loss(params, batch, key):
         def loss_fn(p):

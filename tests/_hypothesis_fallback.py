@@ -1,0 +1,108 @@
+"""Deterministic stand-in for ``hypothesis``, used when the real package is
+not installed (the CPU test container ships without it).
+
+Only the surface this suite uses is provided: ``given``, ``settings``
+(profile registration + decorator no-op), ``HealthCheck``, and the
+strategies ``integers`` / ``floats`` / ``lists`` / ``sampled_from``.
+``@given`` tests run a fixed number of pseudo-random examples drawn from a
+per-test seeded RNG, so failures reproduce exactly across runs.  With the
+real hypothesis installed this module is never imported (see conftest.py).
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, allow_nan: bool = False,
+           allow_infinity: bool = False) -> _Strategy:
+    del allow_nan, allow_infinity  # bounded draws are always finite
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(options) -> _Strategy:
+    opts = list(options)
+    return _Strategy(lambda rng: rng.choice(opts))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def given(*strategies):
+    def decorate(fn):
+        # Zero-argument wrapper: pytest must not mistake the strategy
+        # parameters for fixtures, so the original signature is hidden
+        # (and no __wrapped__ is set, which pytest would follow).
+        def runner():
+            rng = random.Random(f"spring:{fn.__module__}.{fn.__name__}")
+            for _ in range(_MAX_EXAMPLES):
+                fn(*(s.example(rng) for s in strategies))
+
+        runner.__name__ = fn.__name__
+        runner.__module__ = fn.__module__
+        runner.__doc__ = fn.__doc__
+        runner.hypothesis_fallback = True
+        return runner
+
+    return decorate
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+class settings:
+    _profiles: dict = {}
+
+    def __init__(self, **kwargs):
+        self._kwargs = kwargs
+
+    def __call__(self, fn):  # @settings(...) decorator form
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kwargs) -> None:
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        global _MAX_EXAMPLES
+        _MAX_EXAMPLES = int(cls._profiles.get(name, {}).get(
+            "max_examples", _MAX_EXAMPLES))
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = HealthCheck
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "sampled_from"):
+        setattr(strat, name, globals()[name])
+    mod.strategies = strat
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat

@@ -1,8 +1,19 @@
 """Test config: single CPU device (the dry-run sets its own device count
-in a subprocess), moderate hypothesis budgets for the 1-core container."""
+in a subprocess), moderate hypothesis budgets for the 1-core container.
+
+The container may not ship ``hypothesis``; in that case a deterministic
+fallback shim (tests/_hypothesis_fallback.py) is installed so the property
+tests still run instead of aborting collection."""
 
 import jax
-from hypothesis import HealthCheck, settings
+
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    from _hypothesis_fallback import install
+
+    install()
+    from hypothesis import HealthCheck, settings
 
 settings.register_profile(
     "ci",
