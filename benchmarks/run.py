@@ -6,20 +6,35 @@
   bench_compression   Fig 5 binary-mask compression (exact worked example)
   bench_memstash      compressed activation stash: ratio/throughput vs
                       sparsity + formula cross-check + grad overhead
-  bench_kernels       Pallas-kernel jnp-path microbenches
+  bench_kernels       kernel-registry-dispatched microbenches
   bench_sr_training   §6 / Gupta'15 SR-vs-fp32 convergence claim
 
-Run: PYTHONPATH=src python -m benchmarks.run [--skip-slow]
+Run: PYTHONPATH=src python -m benchmarks.run [--skip-slow] [--json PATH]
+
+Suites may emit 3-tuples (name, us, derived) or 4-tuples with a trailing
+resolved kernel-impl name.  The CSV keeps the stable 3-column schema; the
+``--json`` payload carries the impl per row plus the registry's full
+resolution table, so BENCH_*.json trajectories are attributable to a
+backend (and to the SPRING_KERNEL_IMPL / --kernel-impl policy in force).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import traceback
 
 
 def main() -> None:
-    skip_slow = "--skip-slow" in sys.argv
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--skip-slow", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + kernel-impl attribution as JSON")
+    args = ap.parse_args()
+    skip_slow = args.skip_slow
+    json_path = args.json
     from benchmarks import (
         bench_compression,
         bench_kernels,
@@ -34,15 +49,37 @@ def main() -> None:
     if not skip_slow:
         suites.append(bench_sr_training)
 
+    import jax
+
+    from repro.kernels import registry
+
     print("name,us_per_call,derived")
     failures = 0
+    records = []
     for suite in suites:
         try:
-            for name, us, derived in suite.rows():
+            for row in suite.rows():
+                name, us, derived = row[0], row[1], row[2]
+                impl = row[3] if len(row) > 3 else None
                 print(f"{name},{us:.2f},{derived:.6g}")
+                rec = {"name": name, "us_per_call": us, "derived": derived}
+                if impl is not None:
+                    rec["impl"] = impl
+                records.append(rec)
         except Exception:  # keep the harness alive; report at exit
             failures += 1
             traceback.print_exc(file=sys.stderr)
+    if json_path:
+        payload = {
+            "backend": jax.default_backend(),
+            "kernel_policy": registry.current_policy().describe(),
+            "kernel_impls": registry.resolution_table(),
+            "rows": records,
+            "failures": failures,
+        }
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
     if failures:
         sys.exit(1)
 

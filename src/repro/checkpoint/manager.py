@@ -123,11 +123,9 @@ def load_checkpoint(
 
         treedef = pickle.loads(bytes.fromhex(manifest["treedef"]))
     else:
-        from jaxlib._jax import pytree as _pytree
+        from repro.runtime.compat import deserialize_treedef
 
-        treedef = _pytree.PyTreeDef.deserialize_using_proto(
-            jax.tree_util.default_registry, bytes.fromhex(manifest["treedef"])
-        )
+        treedef = deserialize_treedef(bytes.fromhex(manifest["treedef"]))
     return step, jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -14,7 +14,9 @@ modes (``SpringMode``):
 On CPU (this container, and the 512-host-device dry-run) the quant_sparse
 path lowers to the vectorized jnp equivalent — Pallas-for-TPU cannot lower
 on the CPU backend, and interpret-mode callbacks would poison
-``cost_analysis``.  ``use_pallas=True`` (default on TPU) selects the kernel.
+``cost_analysis``.  Backend selection is the ``kernels`` KernelPolicy:
+each matmul resolves ``masked_matmul`` through ``repro.kernels.registry``
+(auto picks Pallas on TPU, the differentiable jnp lowering elsewhere).
 """
 
 from __future__ import annotations
@@ -31,6 +33,7 @@ from repro.core.fixedpoint import (
     ste_quantize_nearest,
     ste_quantize_stochastic,
 )
+from repro.kernels.registry import KernelPolicy
 
 SpringMode = Literal["dense", "quant", "quant_sparse"]
 
@@ -44,8 +47,9 @@ class SpringConfig:
     # Deterministic rounding for activations on the fwd of *inference*;
     # training always uses SR (the paper's convergence argument).
     stochastic: bool = True
-    # Kernel dispatch: Pallas on TPU, jnp elsewhere.
-    use_pallas: bool = False
+    # Kernel-dispatch policy: per-op backend pins + global default,
+    # resolved through repro.kernels.registry at every kernel call site.
+    kernels: KernelPolicy = KernelPolicy()
     # Compute dtype of the dense baseline path.
     dense_dtype: jnp.dtype = jnp.bfloat16
     # §Perf levers for the quantized path:
@@ -131,10 +135,21 @@ def spring_matmul(
         w = w * w_mask.astype(w.dtype)
     wq = _q(w, cfg, keys, role="weight")
 
-    if cfg.is_sparse and cfg.use_pallas:
+    if cfg.is_sparse:
+        from repro.kernels import registry
         from repro.kernels.masked_matmul import ops as mm_ops
 
-        y = mm_ops.masked_matmul(xq, wq)
+        kimpl = registry.resolve_with(cfg.kernels, "masked_matmul")
+        if kimpl.name in ("pallas", "interpret"):
+            # tile-skipping kernel: SR epilogue fused on the MAC lanes
+            # (the outer _q is then an on-grid identity)
+            y = mm_ops.masked_matmul(xq, wq, impl=kimpl.name)
+        else:
+            # "ref"/auto-CPU: the differentiable jnp lowering — fp32
+            # accumulate on the fixed-point grid (DESIGN.md deviation 2)
+            # with the SR epilogue applied below via the STE wrapper, so
+            # gradients flow during quant_sparse training.
+            y = jnp.matmul(xq.astype(jnp.float32), wq.astype(jnp.float32))
     else:
         # fp32 accumulate on the fixed-point grid (DESIGN.md deviation 2).
         y = jnp.matmul(xq.astype(jnp.float32), wq.astype(jnp.float32))

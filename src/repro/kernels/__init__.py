@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""SPRING compute kernels.
+
+Each op family lives in its own package (``<name>_kernel.py`` Pallas
+body, ``ops.py`` public wrapper, ``ref.py`` oracle) and registers its
+implementations with :mod:`repro.kernels.registry` — the single
+dispatch/backend-policy/instrumentation layer every wrapper resolves
+through.  New kernels MUST register (the kernel-parity CI job and the
+registration-completeness test enforce it).
+"""

@@ -1,4 +1,9 @@
-"""Jitted public wrapper: padding + backend dispatch for flash attention."""
+"""Public wrapper: padding + registry dispatch for flash attention.
+
+Implementations: ``ref`` (dense fp32 softmax oracle, the vectorized CPU
+lowering), ``interpret`` (the Pallas kernel in interpret mode, tests),
+``pallas`` (TPU).
+"""
 
 from __future__ import annotations
 
@@ -7,30 +12,18 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.flash_attention.fa_kernel import BK, BQ, flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_reference
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "impl"))
-def flash_attention(
-    q: jax.Array,
-    k: jax.Array,
-    v: jax.Array,
-    *,
-    causal: bool = True,
-    window: int | None = None,
-    impl: str = "auto",
-) -> jax.Array:
-    """Multi-head attention; q (B,H,Sq,D), k/v (B,HKV,Skv,D) -> (B,H,Sq,D).
+@partial(jax.jit, static_argnames=("causal", "window"))
+def _fa_ref(q, k, v, *, causal=True, window=None):
+    return attention_reference(q, k, v, causal=causal, window=window)
 
-    Padded keys land at indices >= Skv and are causally masked for all
-    real queries; padded query rows are sliced away.
-    """
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if impl == "ref":
-        return attention_reference(q, k, v, causal=causal, window=window)
 
+@partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def _fa_kernel(q, k, v, *, causal=True, window=None, interpret=False):
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     sq_pad = (sq + BQ - 1) // BQ * BQ
@@ -38,7 +31,53 @@ def flash_attention(
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
     kp = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
-    out = flash_attention_pallas(
-        qp, kp, vp, causal=causal, window=window, interpret=(impl == "interpret")
-    )
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 interpret=interpret)
     return out[:, :, :sq, :]
+
+
+def _examples() -> list:
+    def qkv(seed, b, h, hkv, s, d, dtype=jnp.float32):
+        key = jax.random.PRNGKey(seed)
+        q = jax.random.normal(jax.random.fold_in(key, 1), (b, h, s, d), dtype)
+        k = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, s, d), dtype)
+        v = jax.random.normal(jax.random.fold_in(key, 3), (b, hkv, s, d), dtype)
+        return q, k, v
+
+    return [
+        (qkv(0, 2, 4, 2, 256, 64), {"causal": True}),
+        (qkv(1, 1, 4, 1, 300, 64), {"causal": True}),     # ragged seq pad
+        (qkv(2, 2, 2, 2, 256, 64), {"causal": True, "window": 128}),
+        (qkv(3, 1, 8, 4, 384, 128), {"causal": False}),
+        (qkv(4, 1, 2, 2, 128, 64, jnp.bfloat16), {},
+         {"kind": "allclose", "atol": 2e-2, "rtol": 0.0}),
+    ]
+
+
+registry.register_op("flash_attention", oracle="ref", examples=_examples,
+                     compare={"kind": "allclose", "atol": 2e-5, "rtol": 0.0})
+registry.register_impl("flash_attention", "ref", priority=10)(_fa_ref)
+registry.register_impl("flash_attention", "interpret", selectable=False)(
+    partial(_fa_kernel, interpret=True))
+registry.register_impl("flash_attention", "pallas", priority=30,
+                       available=registry.on_tpu)(
+    partial(_fa_kernel, interpret=False))
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    impl: str | None = None,
+) -> jax.Array:
+    """Multi-head attention; q (B,H,Sq,D), k/v (B,HKV,Skv,D) -> (B,H,Sq,D).
+
+    Padded keys land at indices >= Skv and are causally masked for all
+    real queries; padded query rows are sliced away.  ``impl`` pins a
+    registered implementation; None defers to the active KernelPolicy.
+    """
+    kimpl = registry.resolve("flash_attention", impl)
+    return kimpl.fn(q, k, v, causal=causal, window=window)

@@ -1,8 +1,13 @@
-"""Jitted public wrapper for the sparsity-aware fixed-point matmul.
+"""Public wrapper for the sparsity-aware fixed-point matmul.
 
 Handles padding to MXU tiles, occupancy-mask computation (the packed
 binary masks AND-reduced per tile — SPRING's pre-compute sparsity stage),
-and backend dispatch (pallas | interpret | ref).
+and registers its implementations with ``repro.kernels.registry``:
+
+  ref        dense f32 matmul + identical SR epilogue (vectorized oracle;
+             the CPU production path)
+  interpret  the Pallas kernel in interpret mode (tests)
+  pallas     the Pallas kernel (TPU)
 """
 
 from __future__ import annotations
@@ -12,6 +17,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.masked_matmul.mm_kernel import BK, BM, BN, masked_matmul_pallas, padded_dims
 from repro.kernels.masked_matmul.ref import masked_matmul_reference
 
@@ -22,28 +28,13 @@ def _occupancy(a: jax.Array, tm: int, tn: int) -> jax.Array:
     return jnp.any(t != 0.0, axis=(1, 3)).astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("il", "fl", "apply_sr", "impl"))
-def masked_matmul(
-    x: jax.Array,
-    w: jax.Array,
-    seed: jax.Array | None = None,
-    *,
-    il: int = 4,
-    fl: int = 16,
-    apply_sr: bool = True,
-    impl: str = "auto",
-) -> jax.Array:
-    """Sparsity-aware ``x @ w`` on the Q(il,fl) grid with SR epilogue.
+@partial(jax.jit, static_argnames=("il", "fl", "apply_sr"))
+def _mm_ref(x, w, seed, *, il=4, fl=16, apply_sr=True):
+    return masked_matmul_reference(x, w, seed, il=il, fl=fl, apply_sr=apply_sr)
 
-    x: (M, K) float32 grid values (zeros = skippable); w: (K, N).
-    """
-    if seed is None:
-        seed = jnp.uint32(0)
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if impl == "ref":
-        return masked_matmul_reference(x, w, seed, il=il, fl=fl, apply_sr=apply_sr)
 
+@partial(jax.jit, static_argnames=("il", "fl", "apply_sr", "interpret"))
+def _mm_kernel(x, w, seed, *, il=4, fl=16, apply_sr=True, interpret=False):
     m, k = x.shape
     _, n = w.shape
     m_pad, n_pad, k_pad = padded_dims(m, n, k)
@@ -52,17 +43,68 @@ def masked_matmul(
     x_occ = _occupancy(xp, BM, BK)
     w_occ = _occupancy(wp, BK, BN)
     out = masked_matmul_pallas(
-        xp,
-        wp,
-        x_occ,
-        w_occ,
-        seed,
-        il=il,
-        fl=fl,
-        apply_sr=apply_sr,
-        interpret=(impl == "interpret"),
+        xp, wp, x_occ, w_occ, seed,
+        il=il, fl=fl, apply_sr=apply_sr, interpret=interpret,
     )
     return out[:m, :n]
+
+
+def _example_operands(seed: int, shape, sparsity: float = 0.5, fl: int = 8):
+    key = jax.random.PRNGKey(seed)
+    v = jnp.round(jax.random.normal(key, shape) * 2**6) / 2**fl
+    keep = jax.random.uniform(jax.random.fold_in(key, 1), shape) > sparsity
+    return v * keep
+
+
+def _examples() -> list:
+    cases = []
+    for m, k, n in [(128, 128, 128), (100, 70, 50), (64, 512, 200)]:
+        x = _example_operands(m * 7 + k, (m, k))
+        w = _example_operands(n * 13 + k, (k, n))
+        cases.append(((x, w, jnp.uint32(5)), {}))
+    # block-pruned operands: whole MXU tiles skipped, plus the SR-off path
+    x = _example_operands(0, (256, 384), 0.3).at[:128, :256].set(0.0)
+    w = _example_operands(1, (384, 256), 0.3).at[256:, 128:].set(0.0)
+    cases.append(((x, w, jnp.uint32(3)), {}))
+    cases.append(((x, w, jnp.uint32(3)), {"apply_sr": False},
+                  {"kind": "allclose", "atol": 1e-6, "rtol": 0.0}))
+    return cases
+
+
+registry.register_op("masked_matmul", oracle="ref", examples=_examples,
+                     compare={"kind": "exact"})
+registry.register_impl("masked_matmul", "ref", priority=10)(_mm_ref)
+registry.register_impl("masked_matmul", "interpret", selectable=False)(
+    partial(_mm_kernel, interpret=True))
+registry.register_impl("masked_matmul", "pallas", priority=30,
+                       available=registry.on_tpu)(
+    partial(_mm_kernel, interpret=False))
+
+
+def masked_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    seed: jax.Array | None = None,
+    *,
+    il: int = 4,
+    fl: int = 16,
+    apply_sr: bool = True,
+    impl: str | None = None,
+) -> jax.Array:
+    """Sparsity-aware ``x @ w`` on the Q(il,fl) grid with SR epilogue.
+
+    x: (M, K) float32 grid values (zeros = skippable); w: (K, N).
+    ``impl`` pins a registered implementation; None defers to the active
+    :class:`~repro.kernels.registry.KernelPolicy`.
+    """
+    if seed is None:
+        seed = jnp.uint32(0)
+    kimpl = registry.resolve("masked_matmul", impl)
+    if registry.metrics_recording() and not isinstance(x, jax.core.Tracer) \
+            and not isinstance(w, jax.core.Tracer):
+        registry.note_metric("masked_matmul",
+                             tile_skip=float(tile_skip_fraction(x, w)))
+    return kimpl.fn(x, w, seed, il=il, fl=fl, apply_sr=apply_sr)
 
 
 def tile_skip_fraction(x: jax.Array, w: jax.Array) -> jax.Array:

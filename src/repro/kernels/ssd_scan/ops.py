@@ -1,8 +1,12 @@
-"""Jitted wrapper for the SSD chunked scan + a vectorized jnp chunked form.
+"""Public wrapper for the SSD chunked scan + a vectorized jnp chunked form.
 
 ``ssd_scan_jnp`` is the same chunked math as the kernel but batched over
 (B, H) with plain einsums + a short lax.scan over chunks — it lowers on
 any backend (the CPU dry-run path) and serves as the production fallback.
+
+Registry entries: ``ref`` (sequential oracle), ``jnp`` (vectorized
+chunked form — the only impl supporting ``return_state=True``, the
+prefill -> decode cache handoff), ``interpret``, ``pallas`` (TPU).
 """
 
 from __future__ import annotations
@@ -12,6 +16,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.ssd_scan.ref import ssd_scan_reference
 from repro.kernels.ssd_scan.ssd_kernel import CHUNK, ssd_scan_pallas
 
@@ -77,22 +82,18 @@ def ssd_scan_jnp(x, dt, a, b, c, chunk: int = CHUNK, return_state: bool = False)
     return y.astype(x.dtype)
 
 
-@partial(jax.jit, static_argnames=("impl", "return_state"))
-def ssd_scan(x, dt, a, b, c, impl: str = "auto", return_state: bool = False):
-    """SSD scan dispatch: pallas (TPU) | interpret | jnp | ref.
+@partial(jax.jit, static_argnames=("return_state",))
+def _ssd_ref(x, dt, a, b, c, *, return_state=False):
+    return ssd_scan_reference(x, dt, a, b, c)
 
-    return_state=True (jnp impl only) also returns the final (B,H,N,P)
-    state — the prefill -> decode cache handoff.
-    """
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
-    if return_state:
-        assert impl == "jnp", "return_state is implemented on the jnp path"
-        return ssd_scan_jnp(x, dt, a, b, c, return_state=True)
-    if impl == "ref":
-        return ssd_scan_reference(x, dt, a, b, c)
-    if impl == "jnp":
-        return ssd_scan_jnp(x, dt, a, b, c)
+
+@partial(jax.jit, static_argnames=("return_state",))
+def _ssd_jnp(x, dt, a, b, c, *, return_state=False):
+    return ssd_scan_jnp(x, dt, a, b, c, return_state=return_state)
+
+
+@partial(jax.jit, static_argnames=("return_state", "interpret"))
+def _ssd_kernel(x, dt, a, b, c, *, return_state=False, interpret=False):
     s = x.shape[1]
     pad = (-s) % CHUNK
     if pad:
@@ -100,5 +101,47 @@ def ssd_scan(x, dt, a, b, c, impl: str = "auto", return_state: bool = False):
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
         c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    y = ssd_scan_pallas(x, dt, a, b, c, interpret=(impl == "interpret"))
+    y = ssd_scan_pallas(x, dt, a, b, c, interpret=interpret)
     return y[:, :s]
+
+
+def _supports_state(return_state: bool = False) -> bool:
+    return not return_state
+
+
+def _examples() -> list:
+    cases = []
+    for i, (bsz, s, h, p, g, n) in enumerate(
+            [(2, 320, 4, 64, 2, 32), (1, 128, 2, 32, 1, 16), (1, 96, 2, 32, 1, 16)]):
+        key = jax.random.PRNGKey(i)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (bsz, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 2), (bsz, s, h)))
+        a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 3), (h,)) * 0.5)
+        b = jax.random.normal(jax.random.fold_in(key, 4), (bsz, s, g, n)) / n**0.5
+        c = jax.random.normal(jax.random.fold_in(key, 5), (bsz, s, g, n)) / n**0.5
+        cases.append(((x, dt, a, b, c), {}))
+    return cases
+
+
+registry.register_op("ssd_scan", oracle="ref", examples=_examples,
+                     compare={"kind": "rel", "tol": 1e-4})
+registry.register_impl("ssd_scan", "ref", supports=_supports_state)(_ssd_ref)
+registry.register_impl("ssd_scan", "jnp", priority=20)(_ssd_jnp)
+registry.register_impl("ssd_scan", "interpret", selectable=False,
+                       supports=_supports_state)(
+    partial(_ssd_kernel, interpret=True))
+registry.register_impl("ssd_scan", "pallas", priority=30,
+                       available=registry.on_tpu, supports=_supports_state)(
+    partial(_ssd_kernel, interpret=False))
+
+
+def ssd_scan(x, dt, a, b, c, impl: str | None = None, return_state: bool = False):
+    """SSD scan through the kernel registry.
+
+    ``return_state=True`` (the prefill -> decode cache handoff) also
+    returns the final (B,H,N,P) state; only the ``jnp`` implementation
+    supports it — pinning any other impl raises a ValueError naming the
+    impl, and auto-selection routes around it.
+    """
+    kimpl = registry.resolve("ssd_scan", impl, return_state=return_state)
+    return kimpl.fn(x, dt, a, b, c, return_state=return_state)

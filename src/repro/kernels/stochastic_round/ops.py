@@ -1,7 +1,8 @@
-"""Jitted public wrapper for the stochastic-rounding kernel.
+"""Public wrapper for the stochastic-rounding kernel.
 
-Dispatch: Pallas kernel on TPU, interpret-mode kernel when explicitly
-requested (tests), bit-identical jnp reference otherwise (CPU dry-run).
+Implementations (see ``repro.kernels.registry``): ``pallas`` on TPU,
+``interpret`` when explicitly requested (tests), bit-identical ``ref``
+jnp lowering elsewhere (the CPU production path).
 """
 
 from __future__ import annotations
@@ -9,25 +10,51 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.stochastic_round.ref import sr_reference
 from repro.kernels.stochastic_round.sr_kernel import sr_pallas
 
 
-@partial(jax.jit, static_argnames=("il", "fl", "impl"))
+@partial(jax.jit, static_argnames=("il", "fl"))
+def _sr_ref(x, seed, *, il=4, fl=16):
+    return sr_reference(x, seed, il=il, fl=fl)
+
+
+@partial(jax.jit, static_argnames=("il", "fl", "interpret"))
+def _sr_kernel(x, seed, *, il=4, fl=16, interpret=False):
+    return sr_pallas(x, seed, il=il, fl=fl, interpret=interpret)
+
+
+def _examples() -> list:
+    cases = []
+    for i, shape in enumerate([(128,), (333, 17), (8, 1024), (3, 5, 9)]):
+        x = jax.random.normal(jax.random.PRNGKey(42 + i), shape) * 3
+        cases.append(((x, jnp.uint32(9)), {}))
+    x = jax.random.normal(jax.random.PRNGKey(4), (256, 64)) * 3
+    cases.append(((x, jnp.uint32(9)), {"il": 2, "fl": 6}))
+    return cases
+
+
+registry.register_op("stochastic_round", oracle="ref", examples=_examples,
+                     compare={"kind": "exact"})
+registry.register_impl("stochastic_round", "ref", priority=10)(_sr_ref)
+registry.register_impl("stochastic_round", "interpret", selectable=False)(
+    partial(_sr_kernel, interpret=True))
+registry.register_impl("stochastic_round", "pallas", priority=30,
+                       available=registry.on_tpu)(
+    partial(_sr_kernel, interpret=False))
+
+
 def stochastic_round(
     x: jax.Array,
     seed: jax.Array,
     *,
     il: int = 4,
     fl: int = 16,
-    impl: str = "auto",
+    impl: str | None = None,
 ) -> jax.Array:
-    """SR onto Q(il, fl). impl: auto|pallas|interpret|ref."""
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if impl == "pallas":
-        return sr_pallas(x, seed, il=il, fl=fl, interpret=False)
-    if impl == "interpret":
-        return sr_pallas(x, seed, il=il, fl=fl, interpret=True)
-    return sr_reference(x, seed, il=il, fl=fl)
+    """SR onto Q(il, fl); ``impl`` pins a registered implementation."""
+    kimpl = registry.resolve("stochastic_round", impl)
+    return kimpl.fn(x, seed, il=il, fl=fl)

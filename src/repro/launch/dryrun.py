@@ -30,6 +30,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import SHAPES, get_arch  # noqa: E402
 from repro.core.spring_ops import DENSE, QUANT, QUANT_SPARSE  # noqa: E402
+from repro.kernels import registry as kernel_registry  # noqa: E402
 from repro.launch.hlo_analysis import (  # noqa: E402
     collective_bytes,
     fusion_adjusted_bytes,
@@ -38,6 +39,7 @@ from repro.launch.hlo_analysis import (  # noqa: E402
 )
 from repro.launch.mesh import make_debug_mesh, make_production_mesh  # noqa: E402
 from repro.optim.optimizers import OptimizerConfig  # noqa: E402
+from repro.runtime.compat import cost_analysis_dict  # noqa: E402
 from repro.runtime.train import (  # noqa: E402
     StepConfig,
     init_train_state,
@@ -188,7 +190,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
              seq_parallel: bool = False, bf16_logits: bool = False,
              layout: str = "tp", remat_policy: str = "full",
              cache_int8: bool = False, quant_opt: bool = False,
-             variant: str = "baseline") -> dict:
+             variant: str = "baseline", kernel_impl: str | None = None) -> dict:
     import dataclasses as _dc
 
     arch = get_arch(arch_id)
@@ -227,6 +229,8 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
     if quant_opt and spring_cfg.is_quantized:
         spring_cfg = _dc.replace(spring_cfg, weights_pre_quantized=True,
                                  operand_rounding="nearest")
+    kpolicy = kernel_registry.KernelPolicy.parse(kernel_impl or "")
+    spring_cfg = _dc.replace(spring_cfg, kernels=kpolicy)
     step_cfg = StepConfig(
         spring=spring_cfg,
         optimizer=OptimizerConfig(kind="adamw"),
@@ -236,16 +240,22 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
     )
     serve_dtype = jnp.bfloat16 if mode == "dense" else jnp.float32
 
+    kernel_registry.reset_dispatch_counts()
     t0 = time.time()
     lowered = run_lower(arch, shape_name, mesh, step_cfg, serve_dtype)
     t_lower = time.time() - t0
+    # what the program actually dispatched at trace time, plus what the
+    # policy resolves for every registered op on this host (roofline_report
+    # renders both so BENCH/dry-run trajectories are backend-attributable)
+    kernel_dispatch = kernel_registry.dispatch_counts()
+    kernel_impls = kernel_registry.resolution_table(kpolicy)
 
     t0 = time.time()
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
     bf16c = (mode == "dense")  # TPU-native bf16 math; CPU legalized it to f32
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     mem = memory_summary(compiled.memory_analysis())
     hlo_text = compiled.as_text()
     coll = collective_bytes(hlo_text, bf16_correct=bf16c)
@@ -265,7 +275,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
         shadow = run_lower(_unrolled(arch), shape_name, mesh, shadow_cfg, serve_dtype)
         shadow_c = shadow.compile()
         t_cost_compile = time.time() - t0
-        cost = shadow_c.cost_analysis()
+        cost = cost_analysis_dict(shadow_c)
         shadow_text = shadow_c.as_text()
         coll = collective_bytes(shadow_text, bf16_correct=bf16c)
         adj = fusion_adjusted_bytes(shadow_text, bf16_correct=bf16c)["fusion_adjusted_bytes"]
@@ -281,6 +291,9 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
         "status": "ok", "n_chips": int(n_chips), "microbatch": microbatch,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "cost_compile_s": round(t_cost_compile, 1) if t_cost_compile else None,
+        "kernel_policy": kpolicy.describe(),
+        "kernel_impls": kernel_impls,
+        "kernel_dispatch": kernel_dispatch,
         "memory": mem, "collectives": coll, "roofline": terms,
     }
     if verbose:
@@ -307,13 +320,16 @@ def main():
     ap.add_argument("--cache-int8", action="store_true")
     ap.add_argument("--quant-opt", action="store_true")
     ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--kernel-impl", default=None,
+                    help="kernel policy spec, e.g. 'ref' or 'ssd_scan=jnp' "
+                         "(see repro.kernels.registry.KernelPolicy.parse)")
     args = ap.parse_args()
     result = run_cell(args.arch, args.shape, args.mesh, args.mode, args.microbatch,
                       cost_unrolled=not args.no_unrolled_cost,
                       seq_parallel=args.seq_parallel, bf16_logits=args.bf16_logits,
                       layout=args.layout, remat_policy=args.remat_policy,
                       cache_int8=args.cache_int8, quant_opt=args.quant_opt,
-                      variant=args.variant)
+                      variant=args.variant, kernel_impl=args.kernel_impl)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

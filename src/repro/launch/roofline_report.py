@@ -84,6 +84,31 @@ def memstash_table(results: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def kernel_table(rows: list[dict]) -> str:
+    """Render the per-cell kernel backend attribution (dry-run
+    ``kernel_impls`` / ``kernel_dispatch``, emitted since the dispatch
+    registry landed; older JSONs without the fields are skipped)."""
+    lines = [
+        "| arch | shape | policy | resolved (op=impl) | dispatches |",
+        "|---|---|---|---|---|",
+    ]
+    any_row = False
+    for r in rows:
+        impls = r.get("kernel_impls")
+        if r.get("status") != "ok" or not impls:
+            continue
+        any_row = True
+        resolved = " ".join(f"{op}={name}" for op, name in sorted(impls.items())
+                            if not str(name).startswith("error"))
+        disp = r.get("kernel_dispatch") or {}
+        dispatched = " ".join(
+            f"{op}:{name}x{n}" for op, by in sorted(disp.items())
+            for name, n in sorted(by.items())) or "-"
+        lines.append(f"| {r['arch']} | {r['shape']} "
+                     f"| {r.get('kernel_policy', 'auto')} | {resolved} | {dispatched} |")
+    return "\n".join(lines) if any_row else ""
+
+
 def pick_hillclimb(rows: list[dict]) -> list[str]:
     ok = [r for r in rows if r["status"] == "ok" and r["mesh"] == "single"]
     notes = []
@@ -107,6 +132,10 @@ def main():
     print(roofline_table(rows, "single"))
     print("\n## Roofline (multi-pod)\n")
     print(roofline_table(rows, "multi"))
+    kt = kernel_table(rows)
+    if kt:
+        print("\n## Kernel dispatch (registry-resolved backends)\n")
+        print(kt)
     print("\n## Hillclimb candidates\n")
     for n in pick_hillclimb(rows):
         print("-", n)

@@ -8,6 +8,7 @@ numerics modes, runnable on CPU with reduced configs.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -15,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.core.spring_ops import DENSE, QUANT, QUANT_SPARSE
+from repro.kernels.registry import KernelPolicy
 from repro.optim.optimizers import OptimizerConfig
 from repro.runtime.train import StepConfig, make_decode_step, make_prefill_step
 
@@ -29,6 +31,7 @@ def serve_session(
     prompt_len: int = 32,
     gen: int = 16,
     mode: str = "dense",
+    kernel_impl: str | None = None,  # KernelPolicy spec, e.g. "ref"
     greedy: bool = True,
     seed: int = 0,
     mesh=None,
@@ -44,7 +47,9 @@ def serve_session(
         def reduced():
             return cfg
 
-    step_cfg = StepConfig(spring=MODES[mode], optimizer=OptimizerConfig())
+    spring_cfg = dataclasses.replace(
+        MODES[mode], kernels=KernelPolicy.parse(kernel_impl or ""))
+    step_cfg = StepConfig(spring=spring_cfg, optimizer=OptimizerConfig())
     key = jax.random.PRNGKey(seed)
 
     from repro.models import encdec as ed_mod
@@ -112,9 +117,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mode", default="dense", choices=list(MODES))
+    ap.add_argument("--kernel-impl", default=None,
+                    help="kernel-dispatch policy, e.g. 'ref', 'interpret', "
+                         "'ssd_scan=jnp' (default: auto)")
     args = ap.parse_args()
     out = serve_session(args.arch, reduced=args.reduced, batch=args.batch,
-                        prompt_len=args.prompt_len, gen=args.gen, mode=args.mode)
+                        prompt_len=args.prompt_len, gen=args.gen, mode=args.mode,
+                        kernel_impl=args.kernel_impl)
     print(f"prefill {out['prefill_s']*1e3:.1f}ms, decode {out['decode_s']*1e3:.1f}ms "
           f"({out['tokens_per_s']:.1f} tok/s), finite={out['finite']}")
     print("sample tokens:", out["generated"][0][:12])

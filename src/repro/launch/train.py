@@ -21,6 +21,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_arch
 from repro.core.fixedpoint import SPRING_FORMAT
 from repro.core.spring_ops import DENSE, QUANT, QUANT_SPARSE, SpringConfig
+from repro.kernels.registry import KernelPolicy
 from repro.memstash.config import MemstashConfig
 from repro.data.pipeline import DataConfig, SyntheticLMStream
 from repro.optim.optimizers import OptimizerConfig
@@ -42,6 +43,7 @@ def train_loop(
     mode: str = "dense",
     lr: float = 3e-3,
     fixed_point_weights: bool = False,
+    kernel_impl: str | None = None,  # KernelPolicy spec, e.g. "ref" | "ssd_scan=jnp"
     stash: str = "none",  # memstash policy: none | remat | stash
     ckpt_dir: str | None = None,
     ckpt_every: int = 100,
@@ -64,8 +66,10 @@ def train_loop(
         else:
             log.warning("--stash %s has no effect for %s (config has no remat_policy)",
                         stash, arch_id)
+    spring_cfg = dataclasses.replace(
+        MODES[mode], kernels=KernelPolicy.parse(kernel_impl or ""))
     step_cfg = StepConfig(
-        spring=MODES[mode],
+        spring=spring_cfg,
         memstash=MemstashConfig(policy=stash),
         optimizer=OptimizerConfig(
             # warmup must not depend on ``steps``: a resumed run would
@@ -133,6 +137,9 @@ def main():
     ap.add_argument("--mode", default="dense", choices=list(MODES))
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--fixed-point-weights", action="store_true")
+    ap.add_argument("--kernel-impl", default=None,
+                    help="kernel-dispatch policy, e.g. 'ref', 'interpret', "
+                         "'ssd_scan=jnp,masked_matmul=ref' (default: auto)")
     ap.add_argument("--stash", default="none", choices=["none", "remat", "stash"],
                     help="memstash activation-checkpoint policy")
     ap.add_argument("--ckpt-dir", default=None)
@@ -141,7 +148,8 @@ def main():
     out = train_loop(
         args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
         seq=args.seq, mode=args.mode, lr=args.lr,
-        fixed_point_weights=args.fixed_point_weights, stash=args.stash,
+        fixed_point_weights=args.fixed_point_weights,
+        kernel_impl=args.kernel_impl, stash=args.stash,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
     )
     print(f"loss {out['first_loss']:.4f} -> {out['last_loss']:.4f} "

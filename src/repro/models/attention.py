@@ -142,7 +142,20 @@ def gqa_apply(
 
     int8_cache = getattr(ctx, "int8_cache", False) and spec.window is None
     if cache is None:
-        out = _chunked_attention(q, k, v, causal=spec.causal, window=spec.window)
+        # Chunked jnp attention is the default lowering (it is what the
+        # dry-run costs); a KernelPolicy pin reroutes the whole pass
+        # through the flash_attention registry op (Pallas on TPU,
+        # dense-softmax ref / interpret elsewhere).
+        imp = ctx.kernel_pinned("flash_attention")
+        if imp is not None:
+            from repro.kernels.flash_attention.ops import flash_attention
+
+            out = flash_attention(
+                q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+                causal=spec.causal, window=spec.window, impl=imp,
+            ).swapaxes(1, 2).astype(x.dtype)
+        else:
+            out = _chunked_attention(q, k, v, causal=spec.causal, window=spec.window)
         new_cache = None
         if return_cache and int8_cache:
             kq, ks = _q8(k)

@@ -40,6 +40,37 @@ class SpringContext:
             return "none"
         return self.memstash.policy_for(name, elems)
 
+    def kernel_impl(self, op: str, **caps) -> str:
+        """Resolve a kernel op under this context's KernelPolicy.
+
+        Returns the concrete impl name model code passes as ``impl=`` so
+        every kernel call site dispatches through the registry with the
+        config-threaded policy (CLI ``--kernel-impl``) taking effect.
+        """
+        from repro.kernels import registry
+
+        return registry.resolve_with(self.cfg.kernels, op, **caps).name
+
+    def kernel_pinned(self, op: str) -> Optional[str]:
+        """Non-auto impl explicitly pinned for ``op``, else None.
+
+        Used by call sites that have their own preferred non-kernel
+        lowering (e.g. chunked jnp attention) and only reroute through
+        the kernel wrapper when the user pinned a backend.
+        """
+        from repro.kernels import registry
+
+        pol = self.cfg.kernels
+        if pol.is_auto:
+            pol = registry.current_policy()
+        name = pol.impl_for(op)
+        if name == "auto":
+            return None
+        if op in dict(pol.overrides):
+            return name  # per-op pin: strict
+        # soft global default: applies only where the op registers it
+        return name if name in registry.impls(op) else None
+
     def maybe_prune(self, w: jax.Array) -> jax.Array:
         if self.prune_ratio <= 0.0:
             return w

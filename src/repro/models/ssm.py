@@ -86,12 +86,17 @@ def ssm_apply(
         xs, bm, cm = jnp.split(xbc, [di, di + g * n], axis=-1)
         xs = constrain(xs.reshape(b, s, h, p), ("batch", "seq", "heads", None))
         if return_cache:
+            # resolve through the registry with the state-handoff
+            # capability: auto routes to the jnp impl, a pinned impl that
+            # cannot return state raises with the impl named
+            imp = ctx.kernel_impl("ssd_scan", return_state=True)
             y, final_state = ssd_scan(xs, dt, a, bm.reshape(b, s, g, n), cm.reshape(b, s, g, n),
-                                      impl="jnp", return_state=True)
+                                      impl=imp, return_state=True)
             new_cache = {"conv": zxbcdt[:, s - (CONV_K - 1):, di: di + spec.conv_dim].astype(jnp.bfloat16),
                          "ssm": final_state.astype(jnp.bfloat16)}
         else:
-            y = ssd_scan(xs, dt, a, bm.reshape(b, s, g, n), cm.reshape(b, s, g, n))
+            y = ssd_scan(xs, dt, a, bm.reshape(b, s, g, n), cm.reshape(b, s, g, n),
+                         impl=ctx.kernel_impl("ssd_scan"))
             new_cache = None
     else:
         assert s == 1

@@ -116,6 +116,23 @@ def _traffic_elems(rec: LayerRecord, batch: int, training: bool) -> tuple[float,
     return act, w
 
 
+def measured_skip_fraction(metric_rows: Iterable[dict]) -> float | None:
+    """Mean masked_matmul tile-skip fraction out of the kernel registry's
+    instrumentation rows (``registry.record_kernel_metrics``), or None if
+    the op never ran eagerly inside the recording block.
+
+    This is the measured counterpart of the analytic ``(1-s_a)(1-s_w)``
+    effectual-MAC scaling: pass it to ``spring_eval`` as
+    ``compute_skip_fraction`` to ground the compute term in what the
+    tile-skipping kernel actually skipped for real operands.
+    """
+    from repro.kernels.registry import metric_summary
+
+    summary = metric_summary(list(metric_rows))
+    mm = summary.get("masked_matmul", {})
+    return mm.get("tile_skip")
+
+
 def spring_eval(
     table: Iterable[LayerRecord],
     batch: int,
@@ -123,10 +140,16 @@ def spring_eval(
     training: bool,
     act_sparsity: float = 0.5,
     w_sparsity: float = 0.5,
+    compute_skip_fraction: float | None = None,
     design: SpringDesign = SPRING_DESIGN,
 ) -> AcceleratorResult:
     d_act = 1.0 - act_sparsity
     d_w = 1.0 - w_sparsity
+    # Effectual-MAC scaling: analytic density product by default, or the
+    # measured tile-skip fraction from the masked_matmul instrumentation
+    # hook (registry metrics) when the caller supplies one.
+    mac_scale = (1.0 - compute_skip_fraction) if compute_skip_fraction is not None \
+        else d_act * d_w
     # single source of the binary-mask traffic formula, shared with (and
     # cross-checked against) the measured memstash wire bytes
     bits_act = formula_bits_per_elem(d_act, design.value_bits)
@@ -134,7 +157,7 @@ def spring_eval(
     total_t = total_e = 0.0
     mac_mult = 3.0 if training else 1.0  # bwd adds dX and dW GEMMs
     for rec in table:
-        macs_eff = rec.macs * batch * mac_mult * d_act * d_w
+        macs_eff = rec.macs * batch * mac_mult * mac_scale
         t_comp = macs_eff / (design.peak_macs * design.compute_util)
         act_elems, w_elems = _traffic_elems(rec, batch, training)
         # on-chip residency: weights (and small activations) that fit in
@@ -178,11 +201,13 @@ def gpu_eval(
 
 
 def evaluate_cnn(cnn: CNNDef, *, training: bool, act_sparsity: float = 0.5,
-                 w_sparsity: float = 0.5) -> dict:
+                 w_sparsity: float = 0.5,
+                 compute_skip_fraction: float | None = None) -> dict:
     table = cnn_layer_table(cnn)
     batch = cnn.train_batch if training else cnn.infer_batch
     s = spring_eval(table, batch, training=training,
-                    act_sparsity=act_sparsity, w_sparsity=w_sparsity)
+                    act_sparsity=act_sparsity, w_sparsity=w_sparsity,
+                    compute_skip_fraction=compute_skip_fraction)
     g = gpu_eval(table, batch, training=training)
     return {
         "cnn": cnn.name,

@@ -1,0 +1,60 @@
+"""Version shims over the pinned jax (0.4.37 in the container) vs newer.
+
+Three surfaces moved between jax versions; all callers in this repo go
+through here so each call site stays version-agnostic:
+
+  * ``shard_map`` — ``jax.shard_map(..., axis_names=..., check_vma=...)``
+    in new jax; ``jax.experimental.shard_map.shard_map(..., auto=...,
+    check_rep=...)`` in 0.4.x.  ``axis_names`` (the manual axes) maps to
+    the old ``auto`` complement; ``check_vma`` maps to ``check_rep``.
+  * treedef (de)serialization — the proto helpers live under
+    ``jaxlib._jax`` in new jax and ``jaxlib.xla_extension`` in 0.4.x.
+  * ``Compiled.cost_analysis()`` — a dict in new jax, a one-element list
+    of dicts in 0.4.x.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[set] = None, check_vma: bool = False):
+    """Backend-portable ``shard_map`` with the new-jax call convention.
+
+    ``axis_names``: mesh axes the body is manual over (None = all).
+    ``check_vma``: replication checking (named ``check_rep`` in 0.4.x).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma,
+                             **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def deserialize_treedef(data: bytes):
+    """Proto-serialized PyTreeDef -> PyTreeDef on either jaxlib layout."""
+    try:
+        from jaxlib._jax import pytree as _pytree
+    except ImportError:  # jax 0.4.x
+        from jaxlib.xla_extension import pytree as _pytree
+    return _pytree.PyTreeDef.deserialize_using_proto(
+        jax.tree_util.default_registry, data
+    )
+
+
+def cost_analysis_dict(compiled) -> dict[str, Any]:
+    """``Compiled.cost_analysis()`` normalized to a flat dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

@@ -24,3 +24,12 @@ settings.register_profile(
 settings.load_profile("ci")
 
 jax.config.update("jax_platform_name", "cpu")
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running end-to-end test")
+    config.addinivalue_line(
+        "markers",
+        "kernel_parity: registry-generated kernel oracle cross-checks "
+        "(CI kernel-parity job runs `pytest -m kernel_parity`)",
+    )
