@@ -23,6 +23,10 @@ import jax.numpy as jnp
 
 from repro.kernels import registry
 from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.masked_matmul.backward import (
+    masked_matmul_dw,
+    masked_matmul_dx,
+)
 from repro.kernels.masked_matmul.ops import masked_matmul, tile_skip_fraction
 from repro.kernels.ssd_scan.ops import ssd_scan
 from repro.kernels.stochastic_round.ops import stochastic_round
@@ -60,6 +64,20 @@ def rows() -> list[tuple]:
     skip = float(tile_skip_fraction(a, w))
     out.append(("kernel.masked_matmul.512cube", us, skip,
                 _resolved("masked_matmul")))
+
+    # the backward GEMMs of the same layer: a ReLU-masked cotangent (top
+    # half of the 128-tiles zeroed) against the sparse weights/activation —
+    # derived = measured backward tile-skip fraction
+    g = jnp.round(jax.random.normal(jax.random.fold_in(key, 8), (m, n)) * 64) / 256
+    g = g.at[:256, :].set(0.0)
+    us = _time(masked_matmul_dx, g, w)
+    out.append(("kernel.masked_matmul_dx.512cube", us,
+                float(tile_skip_fraction(g, w.T)),
+                _resolved("masked_matmul_dx")))
+    us = _time(masked_matmul_dw, a, g)
+    out.append(("kernel.masked_matmul_dw.512cube", us,
+                float(tile_skip_fraction(a.T, g)),
+                _resolved("masked_matmul_dw")))
 
     q = jax.random.normal(key, (1, 4, 512, 64))
     kk = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 512, 64))

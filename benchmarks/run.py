@@ -70,10 +70,18 @@ def main() -> None:
             failures += 1
             traceback.print_exc(file=sys.stderr)
     if json_path:
+        # backward tile-skip attribution: the derived column of every
+        # masked_matmul_dx/dw bench row, keyed by bench name, so BENCH
+        # trajectories track training-direction sparsity separately
+        backward_skip = {
+            r["name"]: r["derived"] for r in records
+            if "masked_matmul_dx" in r["name"] or "masked_matmul_dw" in r["name"]
+        }
         payload = {
             "backend": jax.default_backend(),
             "kernel_policy": registry.current_policy().describe(),
             "kernel_impls": registry.resolution_table(),
+            "backward_tile_skip": backward_skip,
             "rows": records,
             "failures": failures,
         }

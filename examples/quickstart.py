@@ -1,4 +1,4 @@
-"""Quickstart: SPRING's three pillars in ~60 lines.
+"""Quickstart: SPRING's three pillars in ~70 lines.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -18,39 +18,58 @@ from repro.core import (
     spring_matmul,
 )
 
-key = jax.random.PRNGKey(0)
 
-# --- P1: binary-mask sparsity encoding (paper Fig. 5) ----------------------
-x = jax.random.normal(key, (1024,))
-x = x * (jax.random.uniform(jax.random.fold_in(key, 1), x.shape) > 0.5)
-mv = mask_encode(x)
-print(f"[P1] {int(mv.nnz)}/{x.size} non-zeros kept; "
-      f"compression at Q4.16+mask: {float(compression_ratio(mv, 21)):.2f}x; "
-      f"decode exact: {bool(jnp.all(mask_decode(mv) == x))}")
+def main(steps: int = 25) -> None:
+    key = jax.random.PRNGKey(0)
 
-w = jax.random.normal(jax.random.fold_in(key, 2), (1024,))
-w = w * (jax.random.uniform(jax.random.fold_in(key, 3), w.shape) > 0.5)
-print(f"[P1] zero-free dot == dense dot: "
-      f"{abs(float(sparse_dot(mv, mask_encode(w)) - jnp.dot(x, w))) < 1e-4}")
+    # --- P1: binary-mask sparsity encoding (paper Fig. 5) -------------------
+    x = jax.random.normal(key, (1024,))
+    x = x * (jax.random.uniform(jax.random.fold_in(key, 1), x.shape) > 0.5)
+    mv = mask_encode(x)
+    print(f"[P1] {int(mv.nnz)}/{x.size} non-zeros kept; "
+          f"compression at Q4.16+mask: {float(compression_ratio(mv, 21)):.2f}x; "
+          f"decode exact: {bool(jnp.all(mask_decode(mv) == x))}")
 
-# --- P2: stochastic rounding (paper Eq. 4) ----------------------------------
-v = jnp.full((100_000,), 0.5 + 0.3 * SPRING_FORMAT.eps)
-q = quantize_stochastic(jax.random.fold_in(key, 4), v)
-print(f"[P2] SR bias: {float(q.mean() - v[0]) / SPRING_FORMAT.eps:+.4f} eps "
-      f"(unbiased => fixed-point training converges)")
+    w = jax.random.normal(jax.random.fold_in(key, 2), (1024,))
+    w = w * (jax.random.uniform(jax.random.fold_in(key, 3), w.shape) > 0.5)
+    print(f"[P1] zero-free dot == dense dot: "
+          f"{abs(float(sparse_dot(mv, mask_encode(w)) - jnp.dot(x, w))) < 1e-4}")
 
-# --- P1+P2 together: the sparsity-aware quantized matmul --------------------
-a = jax.random.normal(key, (64, 256))
-b = jax.random.normal(jax.random.fold_in(key, 5), (256, 32)) / 256**0.5  # fan-in init
-y_dense = a @ b
-y_spring = spring_matmul(a, b, QUANT_SPARSE, KeyGen(jax.random.fold_in(key, 6)))
-rel = float(jnp.max(jnp.abs(y_spring - y_dense)) / jnp.max(jnp.abs(y_dense)))
-print(f"[P1+P2] spring_matmul rel deviation vs fp32: {rel:.2e} "
-      f"(quantization noise, gradient-safe via STE)")
+    # --- P2: stochastic rounding (paper Eq. 4) ------------------------------
+    v = jnp.full((100_000,), 0.5 + 0.3 * SPRING_FORMAT.eps)
+    q = quantize_stochastic(jax.random.fold_in(key, 4), v)
+    print(f"[P2] SR bias: {float(q.mean() - v[0]) / SPRING_FORMAT.eps:+.4f} eps "
+          f"(unbiased => fixed-point training converges)")
 
-# --- a taste of the training stack ------------------------------------------
-from repro.launch.train import train_loop
+    # --- P1+P2 together: the sparsity-aware quantized matmul ----------------
+    a = jax.random.normal(key, (64, 256))
+    b = jax.random.normal(jax.random.fold_in(key, 5), (256, 32)) / 256**0.5
+    y_dense = a @ b
+    y_spring = spring_matmul(a, b, QUANT_SPARSE, KeyGen(jax.random.fold_in(key, 6)))
+    rel = float(jnp.max(jnp.abs(y_spring - y_dense)) / jnp.max(jnp.abs(y_dense)))
+    print(f"[P1+P2] spring_matmul rel deviation vs fp32: {rel:.2e} "
+          f"(quantization noise, gradient-safe via STE)")
 
-res = train_loop("llama3.2-1b", reduced=True, steps=25, batch=8, seq=64,
-                 mode="quant", fixed_point_weights=True, log_every=100)
-print(f"[train] Q4.16+SR end-to-end: loss {res['first_loss']:.3f} -> {res['last_loss']:.3f}")
+    # --- sparsity in training: the backward pass is masked too --------------
+    # backward_sparsity="auto" (the QUANT_SPARSE default) routes dL/dX and
+    # dL/dW through the tile-skipping masked_matmul_dx/dw kernels.
+    from repro.kernels.masked_matmul.backward import sparsity_probe
+
+    probe = sparsity_probe(density=0.5, size=256)
+    print(f"[train] tile-skip at 50% block density — fwd "
+          f"{probe['forward_tile_skip']:.2f}, bwd dX "
+          f"{probe['backward_tile_skip_dx']:.2f}, bwd dW "
+          f"{probe['backward_tile_skip_dw']:.2f} "
+          f"(sparsity pays in both directions)")
+
+    # --- a taste of the training stack --------------------------------------
+    from repro.launch.train import train_loop
+
+    res = train_loop("llama3.2-1b", reduced=True, steps=steps, batch=8, seq=64,
+                     mode="quant", fixed_point_weights=True, log_every=100)
+    print(f"[train] Q4.16+SR end-to-end: loss {res['first_loss']:.3f} -> "
+          f"{res['last_loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -30,14 +30,23 @@ def config_100m() -> LMConfig:
     )
 
 
-def main():
+def main(steps: int | None = None, argv: list[str] | None = None):
+    """CLI entry point.  ``main(steps=1)`` runs the cpu-small preset for
+    one step with default flags (the smoke-test path)."""
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="cpu-small", choices=["cpu-small", "pod-100m"])
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--mode", default="dense", choices=["dense", "quant", "quant_sparse"])
+    ap.add_argument("--backward-sparsity", default="auto",
+                    choices=["none", "auto", "ref", "jnp", "interpret", "pallas"],
+                    help="sparsity-aware backward pass (quant_sparse mode)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
-    args = ap.parse_args()
+    if steps is not None and argv is None:
+        argv = []  # programmatic call: don't read the host process argv
+    args = ap.parse_args(argv)
+    if steps is not None:
+        args.steps = steps
 
     from repro.launch import train as train_mod
 
@@ -56,11 +65,13 @@ def main():
     res = train_mod.train_loop(
         arch_id, reduced=True, steps=args.steps, batch=batch, seq=seq,
         mode=args.mode, fixed_point_weights=(args.mode != "dense"),
+        backward_sparsity=args.backward_sparsity,
         ckpt_dir=args.ckpt_dir, ckpt_every=100, log_every=20,
     )
     print(f"final: loss {res['first_loss']:.4f} -> {res['last_loss']:.4f} "
           f"over {args.steps} steps; {res['slow_steps']} slow steps; "
           f"checkpoints in {args.ckpt_dir}")
+    return res
 
 
 if __name__ == "__main__":

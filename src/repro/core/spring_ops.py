@@ -37,6 +37,12 @@ from repro.kernels.registry import KernelPolicy
 
 SpringMode = Literal["dense", "quant", "quant_sparse"]
 
+#: Backward-sparsity switch values: "none" differentiates through the
+#: forward lowering (dense autodiff); "auto" routes dL/dX / dL/dW through
+#: the registry-resolved masked_matmul_dx/dw kernels; a concrete impl name
+#: pins the backward backend independently of the forward one.
+BACKWARD_SPARSITY_CHOICES = ("none", "auto", "ref", "jnp", "interpret", "pallas")
+
 
 @dataclasses.dataclass(frozen=True)
 class SpringConfig:
@@ -50,6 +56,11 @@ class SpringConfig:
     # Kernel-dispatch policy: per-op backend pins + global default,
     # resolved through repro.kernels.registry at every kernel call site.
     kernels: KernelPolicy = KernelPolicy()
+    # Sparsity-aware backward pass (quant_sparse mode only): dL/dX and
+    # dL/dW flow through the masked_matmul_dx/dw registry ops so tile
+    # skipping and binary-mask wire savings apply to training, not just
+    # the forward pass (DESIGN.md §8).  Forward numerics are unchanged.
+    backward_sparsity: str = "auto"
     # Compute dtype of the dense baseline path.
     dense_dtype: jnp.dtype = jnp.bfloat16
     # §Perf levers for the quantized path:
@@ -60,6 +71,12 @@ class SpringConfig:
     weights_pre_quantized: bool = False
     operand_rounding: str = "stochastic"  # "stochastic" | "nearest"
 
+    def __post_init__(self):
+        if self.backward_sparsity not in BACKWARD_SPARSITY_CHOICES:
+            raise ValueError(
+                f"unknown backward_sparsity {self.backward_sparsity!r}; "
+                f"choose from {BACKWARD_SPARSITY_CHOICES}")
+
     @property
     def is_quantized(self) -> bool:
         return self.mode != "dense"
@@ -67,6 +84,11 @@ class SpringConfig:
     @property
     def is_sparse(self) -> bool:
         return self.mode == "quant_sparse"
+
+    @property
+    def sparse_backward(self) -> bool:
+        """True when the sparsity-aware custom_vjp backward is in force."""
+        return self.is_sparse and self.backward_sparsity != "none"
 
 
 DENSE = SpringConfig(mode="dense")
@@ -139,11 +161,26 @@ def spring_matmul(
         from repro.kernels import registry
         from repro.kernels.masked_matmul import ops as mm_ops
 
+        # 2-D calls route the backward through the sparsity-aware dx/dw
+        # kernels; batched matmuls (rare: MoE dispatch paths) keep dense
+        # autodiff — the tiled kernels are 2-D by construction.
+        bwd = cfg.backward_sparsity if cfg.sparse_backward \
+            and xq.ndim == 2 and wq.ndim == 2 else "none"
         kimpl = registry.resolve_with(cfg.kernels, "masked_matmul")
         if kimpl.name in ("pallas", "interpret"):
             # tile-skipping kernel: SR epilogue fused on the MAC lanes
-            # (the outer _q is then an on-grid identity)
-            y = mm_ops.masked_matmul(xq, wq, impl=kimpl.name)
+            # (the outer _q is then an on-grid identity); without the
+            # custom_vjp backward this path is forward-only (Pallas calls
+            # define no autodiff rule)
+            y = mm_ops.masked_matmul(xq, wq, impl=kimpl.name, backward=bwd)
+        elif bwd != "none":
+            # "ref"/auto-CPU with sparse backward: the forward is the ref
+            # impl with the SR epilogue disabled — bit-identical to the
+            # dense jnp lowering below (ref(apply_sr=False) IS jnp.dot) —
+            # while dL/dX / dL/dW resolve through masked_matmul_dx/dw.
+            # The STE epilogue still comes from the outer _q.
+            y = mm_ops.masked_matmul(xq, wq, impl="ref", apply_sr=False,
+                                     backward=bwd)
         else:
             # "ref"/auto-CPU: the differentiable jnp lowering — fp32
             # accumulate on the fixed-point grid (DESIGN.md deviation 2)
@@ -156,6 +193,77 @@ def spring_matmul(
 
     # MAC-lane epilogue: stochastic rounding back to the storage format.
     return _q(y, cfg, keys)
+
+
+# ---------------------------------------------------------------------------
+# Sparsity-aware conv backward: both backward GEMMs of an NHWC conv are
+# matmuls over patch matrices, so they route through the registry-resolved
+# masked_matmul_dx/dw kernels exactly like the fc layers (DESIGN.md §8):
+#
+#   dW = patches(x).T @ g      — the stashed ReLU-sparse activation re-read
+#   dX = patches~(g) @ rot(w)  — the ReLU-masked cotangent, stride-dilated
+#
+# where patches~ extracts windows of the cotangent with lhs_dilation=stride
+# and transpose-conv padding, and rot(w) is the spatially-flipped weight.
+# ---------------------------------------------------------------------------
+
+import functools as _functools
+
+from jax import lax as _lax
+
+_CONV_DNUMS = ("NHWC", "HWIO", "NHWC")
+
+
+def _conv_nhwc(x, w, stride, padding):
+    return _lax.conv_general_dilated(
+        x, w, window_strides=stride, padding=padding,
+        dimension_numbers=_CONV_DNUMS)
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _conv_with_sparse_bwd(x, w, stride, padding, bwd_impl):
+    return _conv_nhwc(x, w, stride, padding)
+
+
+def _conv_sb_fwd(x, w, stride, padding, bwd_impl):
+    return _conv_nhwc(x, w, stride, padding), (x, w)
+
+
+def _conv_sb_bwd(stride, padding, bwd_impl, res, g):
+    from repro.kernels.masked_matmul.backward import (
+        masked_matmul_dw, masked_matmul_dx)
+
+    x, w = res
+    impl = None if bwd_impl == "auto" else bwd_impl
+    n, h, wd, cin = x.shape
+    r, s, _, cout = w.shape
+    oh, ow = g.shape[1], g.shape[2]
+    g2 = g.reshape(-1, cout)
+
+    # dW: im2col patches of the stashed sparse activation x the cotangent.
+    # conv_general_dilated_patches orders the patch features (Cin, R, S).
+    p = _lax.conv_general_dilated_patches(
+        x, filter_shape=(r, s), window_strides=stride, padding=padding,
+        dimension_numbers=_CONV_DNUMS)
+    dw = masked_matmul_dw(p.reshape(-1, cin * r * s), g2, impl=impl)
+    dw = dw.reshape(cin, r, s, cout).transpose(1, 2, 0, 3)
+
+    # dX: transpose-conv as dilated cotangent patches x flipped weights.
+    fwd_pads = _lax.padtype_to_pads((h, wd), (r, s), stride, padding)
+    bwd_pads = [
+        (k - 1 - plo, dim - (odim - 1) * st + plo - 1)
+        for (plo, _), k, dim, odim, st in zip(
+            fwd_pads, (r, s), (h, wd), (oh, ow), stride)
+    ]
+    pg = _lax.conv_general_dilated_patches(
+        g, filter_shape=(r, s), window_strides=(1, 1), padding=bwd_pads,
+        lhs_dilation=stride, dimension_numbers=_CONV_DNUMS)
+    wt = w[::-1, ::-1].transpose(3, 0, 1, 2).reshape(cout * r * s, cin)
+    dx = masked_matmul_dx(pg.reshape(-1, cout * r * s), wt.T, impl=impl)
+    return dx.reshape(n, h, wd, cin), dw
+
+
+_conv_with_sparse_bwd.defvjp(_conv_sb_fwd, _conv_sb_bwd)
 
 
 def spring_conv2d(
@@ -180,6 +288,15 @@ def spring_conv2d(
 
     xq = _q(x, cfg, keys, role="act")
     wq = _q(w, cfg, keys, role="weight")
+    if cfg.sparse_backward and feature_group_count == 1:
+        # forward identical to the dense lowering below; backward GEMMs
+        # (dX/dW) route through masked_matmul_dx/dw.  Grouped/depthwise
+        # convs keep dense autodiff — their patch matrices interleave
+        # groups and defeat the tiled kernels.
+        y = _conv_with_sparse_bwd(
+            xq.astype(jnp.float32), wq.astype(jnp.float32),
+            tuple(stride), padding, cfg.backward_sparsity)
+        return _q(y, cfg, keys)
     y = jax.lax.conv_general_dilated(
         xq.astype(jnp.float32),
         wq.astype(jnp.float32),

@@ -90,12 +90,20 @@ def masked_matmul(
     fl: int = 16,
     apply_sr: bool = True,
     impl: str | None = None,
+    backward: str | None = None,
 ) -> jax.Array:
     """Sparsity-aware ``x @ w`` on the Q(il,fl) grid with SR epilogue.
 
     x: (M, K) float32 grid values (zeros = skippable); w: (K, N).
     ``impl`` pins a registered implementation; None defers to the active
     :class:`~repro.kernels.registry.KernelPolicy`.
+
+    ``backward`` selects the sparsity-aware training direction: None/"none"
+    differentiates through the resolved forward impl (dense autodiff; the
+    Pallas paths are not differentiable), while "auto" or a concrete impl
+    name wraps the call in a ``custom_vjp`` whose dL/dx / dL/dw are the
+    registry-resolved ``masked_matmul_dx`` / ``masked_matmul_dw`` kernels —
+    tile skipping applies in both directions (DESIGN.md §8).
     """
     if seed is None:
         seed = jnp.uint32(0)
@@ -104,7 +112,12 @@ def masked_matmul(
             and not isinstance(w, jax.core.Tracer):
         registry.note_metric("masked_matmul",
                              tile_skip=float(tile_skip_fraction(x, w)))
-    return kimpl.fn(x, w, seed, il=il, fl=fl, apply_sr=apply_sr)
+    if backward in (None, "none"):
+        return kimpl.fn(x, w, seed, il=il, fl=fl, apply_sr=apply_sr)
+    from repro.kernels.masked_matmul.backward import mm_call_with_backward
+
+    return mm_call_with_backward(x, w, seed, il=il, fl=fl, apply_sr=apply_sr,
+                                 fwd_impl=kimpl.name, bwd_impl=backward)
 
 
 def tile_skip_fraction(x: jax.Array, w: jax.Array) -> jax.Array:

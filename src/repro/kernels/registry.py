@@ -61,6 +61,7 @@ IMPL_NAMES = ("ref", "jnp", "interpret", "pallas")
 #: ops.py modules that self-register on import (lazy to avoid cycles).
 _OP_MODULES = (
     "repro.kernels.masked_matmul.ops",
+    "repro.kernels.masked_matmul.backward",
     "repro.kernels.mask_compress.ops",
     "repro.kernels.stochastic_round.ops",
     "repro.kernels.flash_attention.ops",

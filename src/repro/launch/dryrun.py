@@ -190,7 +190,9 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
              seq_parallel: bool = False, bf16_logits: bool = False,
              layout: str = "tp", remat_policy: str = "full",
              cache_int8: bool = False, quant_opt: bool = False,
-             variant: str = "baseline", kernel_impl: str | None = None) -> dict:
+             variant: str = "baseline", kernel_impl: str | None = None,
+             backward_sparsity: str = "auto",
+             probe_density: float = 0.5) -> dict:
     import dataclasses as _dc
 
     arch = get_arch(arch_id)
@@ -233,6 +235,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
     spring_cfg = _dc.replace(spring_cfg, kernels=kpolicy)
     step_cfg = StepConfig(
         spring=spring_cfg,
+        backward_sparsity=backward_sparsity,
         optimizer=OptimizerConfig(kind="adamw"),
         microbatch=microbatch,
         rules_override=rules_override,
@@ -294,8 +297,17 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
         "kernel_policy": kpolicy.describe(),
         "kernel_impls": kernel_impls,
         "kernel_dispatch": kernel_dispatch,
+        "backward_sparsity": backward_sparsity,
         "memory": mem, "collectives": coll, "roofline": terms,
     }
+    if mode == "quant_sparse" and backward_sparsity != "none" \
+            and sh.kind == "train":
+        # Measured fwd/bwd tile-skip at the probe density: the lowered
+        # program never executes in a dry run, so this small eager probe
+        # is what attributes backward sparsity savings per cell.
+        from repro.kernels.masked_matmul.backward import sparsity_probe
+
+        result["sparsity_probe"] = sparsity_probe(probe_density, size=256)
     if verbose:
         print(json.dumps(result, indent=2))
         print(f"peak bytes/chip (arg+out+temp-alias): {mem['peak_bytes_per_chip_est']/1e9:.3f} GB", file=sys.stderr)
@@ -323,13 +335,20 @@ def main():
     ap.add_argument("--kernel-impl", default=None,
                     help="kernel policy spec, e.g. 'ref' or 'ssd_scan=jnp' "
                          "(see repro.kernels.registry.KernelPolicy.parse)")
+    ap.add_argument("--backward-sparsity", default="auto",
+                    choices=["none", "auto", "ref", "jnp", "interpret", "pallas"],
+                    help="sparsity-aware backward pass for quant_sparse cells")
+    ap.add_argument("--probe-density", type=float, default=0.5,
+                    help="tile-granular density for the backward-skip probe")
     args = ap.parse_args()
     result = run_cell(args.arch, args.shape, args.mesh, args.mode, args.microbatch,
                       cost_unrolled=not args.no_unrolled_cost,
                       seq_parallel=args.seq_parallel, bf16_logits=args.bf16_logits,
                       layout=args.layout, remat_policy=args.remat_policy,
                       cache_int8=args.cache_int8, quant_opt=args.quant_opt,
-                      variant=args.variant, kernel_impl=args.kernel_impl)
+                      variant=args.variant, kernel_impl=args.kernel_impl,
+                      backward_sparsity=args.backward_sparsity,
+                      probe_density=args.probe_density)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

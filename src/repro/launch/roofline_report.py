@@ -109,6 +109,33 @@ def kernel_table(rows: list[dict]) -> str:
     return "\n".join(lines) if any_row else ""
 
 
+def backward_sparsity_table(rows: list[dict]) -> str:
+    """Render per-cell backward tile-skip probes (dry-run ``sparsity_probe``
+    emitted for quant_sparse train cells since the sparsity-aware backward
+    landed; older JSONs without the field are skipped).  Forward and
+    backward skip fractions are attributed separately — the backward
+    columns are what the custom_vjp dx/dw kernels measured."""
+    lines = [
+        "| arch | shape | bwd policy | probe density | fwd skip | dX skip | dW skip |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    any_row = False
+    for r in rows:
+        p = r.get("sparsity_probe")
+        if r.get("status") != "ok" or not p:
+            continue
+        any_row = True
+
+        def f(v):
+            return "-" if v is None else f"{v:.3f}"
+
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('backward_sparsity', 'auto')} "
+            f"| {p['density']:.2f} | {f(p['forward_tile_skip'])} "
+            f"| {f(p['backward_tile_skip_dx'])} | {f(p['backward_tile_skip_dw'])} |")
+    return "\n".join(lines) if any_row else ""
+
+
 def pick_hillclimb(rows: list[dict]) -> list[str]:
     ok = [r for r in rows if r["status"] == "ok" and r["mesh"] == "single"]
     notes = []
@@ -136,6 +163,10 @@ def main():
     if kt:
         print("\n## Kernel dispatch (registry-resolved backends)\n")
         print(kt)
+    bt = backward_sparsity_table(rows)
+    if bt:
+        print("\n## Backward sparsity (measured tile-skip, fwd vs dX/dW)\n")
+        print(bt)
     print("\n## Hillclimb candidates\n")
     for n in pick_hillclimb(rows):
         print("-", n)

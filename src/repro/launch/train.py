@@ -44,6 +44,7 @@ def train_loop(
     lr: float = 3e-3,
     fixed_point_weights: bool = False,
     kernel_impl: str | None = None,  # KernelPolicy spec, e.g. "ref" | "ssd_scan=jnp"
+    backward_sparsity: str = "auto",  # none | auto | ref | jnp | interpret | pallas
     stash: str = "none",  # memstash policy: none | remat | stash
     ckpt_dir: str | None = None,
     ckpt_every: int = 100,
@@ -70,6 +71,7 @@ def train_loop(
         MODES[mode], kernels=KernelPolicy.parse(kernel_impl or ""))
     step_cfg = StepConfig(
         spring=spring_cfg,
+        backward_sparsity=backward_sparsity,
         memstash=MemstashConfig(policy=stash),
         optimizer=OptimizerConfig(
             # warmup must not depend on ``steps``: a resumed run would
@@ -140,6 +142,11 @@ def main():
     ap.add_argument("--kernel-impl", default=None,
                     help="kernel-dispatch policy, e.g. 'ref', 'interpret', "
                          "'ssd_scan=jnp,masked_matmul=ref' (default: auto)")
+    ap.add_argument("--backward-sparsity", default="auto",
+                    choices=["none", "auto", "ref", "jnp", "interpret", "pallas"],
+                    help="sparsity-aware backward pass (quant_sparse mode): "
+                         "route dL/dX / dL/dW through the masked_matmul_dx/dw "
+                         "kernels; 'none' keeps dense autodiff")
     ap.add_argument("--stash", default="none", choices=["none", "remat", "stash"],
                     help="memstash activation-checkpoint policy")
     ap.add_argument("--ckpt-dir", default=None)
@@ -149,7 +156,8 @@ def main():
         args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
         seq=args.seq, mode=args.mode, lr=args.lr,
         fixed_point_weights=args.fixed_point_weights,
-        kernel_impl=args.kernel_impl, stash=args.stash,
+        kernel_impl=args.kernel_impl, backward_sparsity=args.backward_sparsity,
+        stash=args.stash,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
     )
     print(f"loss {out['first_loss']:.4f} -> {out['last_loss']:.4f} "

@@ -51,6 +51,16 @@ class SpringContext:
 
         return registry.resolve_with(self.cfg.kernels, op, **caps).name
 
+    def backward_sparsity(self) -> str:
+        """The backward-sparsity switch in force for this context.
+
+        "none" unless the sparsity-aware custom_vjp backward is actually
+        in force (same ``sparse_backward`` gate the spring ops dispatch
+        on); otherwise the SpringConfig switch — "auto" or a pinned
+        backward impl name.
+        """
+        return self.cfg.backward_sparsity if self.cfg.sparse_backward else "none"
+
     def kernel_pinned(self, op: str) -> Optional[str]:
         """Non-auto impl explicitly pinned for ``op``, else None.
 

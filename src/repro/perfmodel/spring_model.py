@@ -116,8 +116,9 @@ def _traffic_elems(rec: LayerRecord, batch: int, training: bool) -> tuple[float,
     return act, w
 
 
-def measured_skip_fraction(metric_rows: Iterable[dict]) -> float | None:
-    """Mean masked_matmul tile-skip fraction out of the kernel registry's
+def measured_skip_fraction(metric_rows: Iterable[dict],
+                           op: str = "masked_matmul") -> float | None:
+    """Mean tile-skip fraction of ``op`` out of the kernel registry's
     instrumentation rows (``registry.record_kernel_metrics``), or None if
     the op never ran eagerly inside the recording block.
 
@@ -129,8 +130,23 @@ def measured_skip_fraction(metric_rows: Iterable[dict]) -> float | None:
     from repro.kernels.registry import metric_summary
 
     summary = metric_summary(list(metric_rows))
-    mm = summary.get("masked_matmul", {})
-    return mm.get("tile_skip")
+    return summary.get(op, {}).get("tile_skip")
+
+
+def measured_backward_skip_fraction(metric_rows: Iterable[dict]) -> float | None:
+    """Mean tile-skip fraction over the backward GEMMs (``masked_matmul_dx``
+    and ``masked_matmul_dw`` instrumentation rows), or None if neither ran.
+
+    The backward counterpart of :func:`measured_skip_fraction`: pass it to
+    ``spring_eval`` as ``backward_skip_fraction`` so training's 2x backward
+    MACs are scaled by what the dx/dw kernels actually skipped instead of
+    inheriting the forward fraction.
+    """
+    rows = list(metric_rows)
+    skips = [s for s in (measured_skip_fraction(rows, op)
+                         for op in ("masked_matmul_dx", "masked_matmul_dw"))
+             if s is not None]
+    return sum(skips) / len(skips) if skips else None
 
 
 def spring_eval(
@@ -141,6 +157,7 @@ def spring_eval(
     act_sparsity: float = 0.5,
     w_sparsity: float = 0.5,
     compute_skip_fraction: float | None = None,
+    backward_skip_fraction: float | None = None,
     design: SpringDesign = SPRING_DESIGN,
 ) -> AcceleratorResult:
     d_act = 1.0 - act_sparsity
@@ -150,14 +167,21 @@ def spring_eval(
     # hook (registry metrics) when the caller supplies one.
     mac_scale = (1.0 - compute_skip_fraction) if compute_skip_fraction is not None \
         else d_act * d_w
+    # Backward (dX + dW GEMMs, 2x the forward MACs when training): scaled
+    # by the measured masked_matmul_dx/dw skip when supplied, else it
+    # inherits the forward scaling — the paper's symmetric assumption.
+    bwd_scale = (1.0 - backward_skip_fraction) \
+        if backward_skip_fraction is not None else mac_scale
     # single source of the binary-mask traffic formula, shared with (and
     # cross-checked against) the measured memstash wire bytes
     bits_act = formula_bits_per_elem(d_act, design.value_bits)
     bits_w = formula_bits_per_elem(d_w, design.value_bits)
     total_t = total_e = 0.0
-    mac_mult = 3.0 if training else 1.0  # bwd adds dX and dW GEMMs
+    # fwd MACs x1 at mac_scale; training adds the dX and dW GEMMs (x2
+    # the forward MACs) at the backward scaling
+    eff_mult = mac_scale + (2.0 * bwd_scale if training else 0.0)
     for rec in table:
-        macs_eff = rec.macs * batch * mac_mult * mac_scale
+        macs_eff = rec.macs * batch * eff_mult
         t_comp = macs_eff / (design.peak_macs * design.compute_util)
         act_elems, w_elems = _traffic_elems(rec, batch, training)
         # on-chip residency: weights (and small activations) that fit in
@@ -202,12 +226,14 @@ def gpu_eval(
 
 def evaluate_cnn(cnn: CNNDef, *, training: bool, act_sparsity: float = 0.5,
                  w_sparsity: float = 0.5,
-                 compute_skip_fraction: float | None = None) -> dict:
+                 compute_skip_fraction: float | None = None,
+                 backward_skip_fraction: float | None = None) -> dict:
     table = cnn_layer_table(cnn)
     batch = cnn.train_batch if training else cnn.infer_batch
     s = spring_eval(table, batch, training=training,
                     act_sparsity=act_sparsity, w_sparsity=w_sparsity,
-                    compute_skip_fraction=compute_skip_fraction)
+                    compute_skip_fraction=compute_skip_fraction,
+                    backward_skip_fraction=backward_skip_fraction)
     g = gpu_eval(table, batch, training=training)
     return {
         "cnn": cnn.name,

@@ -32,6 +32,12 @@ from repro.runtime.sharding import DEFAULT_RULES, sharding_context
 @dataclasses.dataclass(frozen=True)
 class StepConfig:
     spring: SpringConfig = DENSE
+    # Sparsity-aware backward pass override: None inherits the
+    # SpringConfig.backward_sparsity field (default "auto" — dx/dW through
+    # the registry-resolved masked_matmul_dx/dw kernels in quant_sparse
+    # mode); launch CLIs set it explicitly ("none" | "auto" | impl name)
+    # so --backward-sparsity switches it without rebuilding SpringConfig.
+    backward_sparsity: Optional[str] = None
     prune_ratio: float = 0.0
     optimizer: OptimizerConfig = OptimizerConfig()
     # int8+error-feedback gradient reduction across the 'pod' mesh axis
@@ -86,6 +92,16 @@ def _loss_for(arch, cfg, params, batch, ctx):
     return lm_mod.lm_loss(params, cfg, batch["tokens"], ctx, batch.get("img_embeds"))
 
 
+def _spring_for(step_cfg: StepConfig) -> SpringConfig:
+    """SpringConfig with the step-level backward_sparsity override applied
+    (None = inherit whatever the SpringConfig itself says)."""
+    if step_cfg.backward_sparsity is None \
+            or step_cfg.spring.backward_sparsity == step_cfg.backward_sparsity:
+        return step_cfg.spring
+    return dataclasses.replace(step_cfg.spring,
+                               backward_sparsity=step_cfg.backward_sparsity)
+
+
 def _rules_for(step_cfg: StepConfig):
     if not step_cfg.rules_override:
         return None
@@ -99,10 +115,11 @@ def make_train_step(arch, step_cfg: StepConfig, mesh=None, reduced: bool = False
     constraints activate and the function is ready to jit with shardings."""
     cfg = arch.reduced() if reduced else arch.config
     _, opt_update = make_optimizer(step_cfg.optimizer)
+    spring_cfg = _spring_for(step_cfg)
 
     def ctx_for(key) -> SpringContext:
-        keys = KeyGen(key) if step_cfg.spring.is_quantized else None
-        return SpringContext(cfg=step_cfg.spring, keys=keys,
+        keys = KeyGen(key) if spring_cfg.is_quantized else None
+        return SpringContext(cfg=spring_cfg, keys=keys,
                              prune_ratio=step_cfg.prune_ratio,
                              memstash=step_cfg.memstash)
 

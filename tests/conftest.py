@@ -33,3 +33,9 @@ def pytest_configure(config):
         "kernel_parity: registry-generated kernel oracle cross-checks "
         "(CI kernel-parity job runs `pytest -m kernel_parity`)",
     )
+    config.addinivalue_line(
+        "markers",
+        "grad_parity: sparsity-aware backward (custom_vjp) gradient "
+        "cross-checks vs the dense ref gradient "
+        "(CI grad-parity job runs `pytest -m grad_parity`)",
+    )

@@ -1,0 +1,349 @@
+"""Sparsity-aware backward pass: gradient parity of the custom_vjp masked
+kernels against the dense ref gradient, for every registered
+``masked_matmul_dx`` / ``masked_matmul_dw`` implementation runnable on
+this backend, plus the StepConfig/launch threading and the end-to-end
+stash/masked conv+fc acceptance check (ISSUE 3)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spring_ops import (
+    BACKWARD_SPARSITY_CHOICES,
+    QUANT_SPARSE,
+    KeyGen,
+    SpringConfig,
+    spring_conv2d,
+    spring_matmul,
+)
+from repro.kernels import registry
+from repro.kernels.masked_matmul.backward import (
+    masked_matmul_dw,
+    masked_matmul_dx,
+    sparsity_probe,
+)
+from repro.kernels.masked_matmul.ops import masked_matmul
+
+# every backward impl runnable on this backend (pallas is TPU-only)
+BWD_IMPLS = sorted(
+    name for name, k in registry.impls("masked_matmul_dx").items()
+    if k.available()
+)
+
+DENSITIES = [0.0, 0.1, 0.5, 1.0]
+# (M, K, N): square, non-square, tile-unaligned
+SHAPES = [(128, 128, 128), (100, 70, 50), (64, 200, 96)]
+FORMATS = [(4, 16), (2, 6)]  # fp32-grid Q4.16 and a reduced-precision grid
+
+
+def _sparse(seed: int, shape, density: float) -> jax.Array:
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, shape) * 0.1
+    keep = jax.random.uniform(jax.random.fold_in(key, 1), shape) < density
+    return v * keep
+
+
+# ---------------------------------------------------------------------------
+# Registry completeness: an unregistered backward impl must fail here.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.grad_parity
+def test_backward_ops_registered_with_full_impl_ladder():
+    """Every forward masked_matmul impl has a same-named dx and dw impl,
+    and both backward ops carry parity examples so the registry-generated
+    harness (tests/test_kernel_registry.py, bench --smoke) covers them."""
+    fwd = set(registry.impls("masked_matmul"))
+    # every forward backend has a matching backward impl (the backward
+    # additionally registers the occupancy-gated jnp lowering)
+    assert fwd <= set(registry.impls("masked_matmul_dx"))
+    assert fwd <= set(registry.impls("masked_matmul_dw"))
+    assert set(registry.impls("masked_matmul_dx")) == \
+        set(registry.impls("masked_matmul_dw"))
+    assert registry.op_spec("masked_matmul_dx").examples is not None
+    assert registry.op_spec("masked_matmul_dw").examples is not None
+    # and they show up in the generated parity sweep on this backend
+    pairs = set(registry.parity_pairs())
+    for op in ("masked_matmul_dx", "masked_matmul_dw"):
+        for name, k in registry.impls(op).items():
+            if name != "ref" and k.available() and k.parity:
+                assert (op, name) in pairs, f"({op}, {name}) not parity-swept"
+
+
+# ---------------------------------------------------------------------------
+# Gradient parity: custom_vjp path vs jax.grad of the pure dense path.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.grad_parity
+@pytest.mark.parametrize("impl", BWD_IMPLS)
+@pytest.mark.parametrize("density", DENSITIES)
+def test_grad_parity_all_shapes_and_formats(impl, density):
+    """jax.grad through masked_matmul(backward=impl) == jax.grad through
+    the dense ref matmul, across shapes and Q(il,fl) formats.  The ReLU
+    in the loss makes the cotangent mask-structured (Sarma et al.)."""
+    for m, k, n in SHAPES:
+        for il, fl in FORMATS:
+            x = _sparse(m * 31 + k, (m, k), density)
+            w = _sparse(n * 17 + k, (k, n), density if density else 0.5)
+
+            def loss_vjp(x, w):
+                y = masked_matmul(x, w, il=il, fl=fl, apply_sr=False,
+                                  impl="ref", backward=impl)
+                return jnp.sum(jax.nn.relu(y) ** 2)
+
+            def loss_dense(x, w):
+                return jnp.sum(jax.nn.relu(
+                    jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))) ** 2)
+
+            gx, gw = jax.grad(loss_vjp, argnums=(0, 1))(x, w)
+            rx, rw = jax.grad(loss_dense, argnums=(0, 1))(x, w)
+            np.testing.assert_allclose(np.asarray(gx), np.asarray(rx),
+                                       rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(gw), np.asarray(rw),
+                                       rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.grad_parity
+@pytest.mark.parametrize("impl", BWD_IMPLS)
+def test_grad_parity_under_jit_and_auto(impl):
+    x = _sparse(0, (96, 64), 0.5)
+    w = _sparse(1, (64, 80), 0.5)
+
+    def loss(x, w, bwd):
+        y = masked_matmul(x, w, apply_sr=False, impl="ref", backward=bwd)
+        return jnp.sum(y ** 2)
+
+    ref = jax.grad(lambda x, w: jnp.sum(jnp.dot(x, w) ** 2),
+                   argnums=(0, 1))(x, w)
+    for bwd in (impl, "auto"):
+        got = jax.jit(jax.grad(lambda x, w: loss(x, w, bwd),
+                               argnums=(0, 1)))(x, w)
+        for g, r in zip(got, ref):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                       rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.grad_parity
+def test_backward_dispatch_counts_attribute_impl():
+    """The dx/dw resolutions show up in dispatch_counts under the pinned
+    impl — backward backend choices are attributable, like forward ones."""
+    x, w = _sparse(2, (64, 64), 0.5), _sparse(3, (64, 64), 0.5)
+    registry.reset_dispatch_counts()
+    jax.grad(lambda x: jnp.sum(masked_matmul(
+        x, w, apply_sr=False, impl="ref", backward="interpret") ** 2))(x)
+    counts = registry.dispatch_counts()
+    assert counts["masked_matmul_dx"] == {"interpret": 1}
+    assert counts["masked_matmul_dw"] == {"interpret": 1}
+
+
+@pytest.mark.grad_parity
+def test_bad_backward_pin_fails_at_call_site():
+    x, w = _sparse(4, (64, 64), 0.5), _sparse(5, (64, 64), 0.5)
+    assert jax.default_backend() != "tpu"
+    with pytest.raises(ValueError, match="not available"):
+        masked_matmul(x, w, backward="pallas")
+    with pytest.raises(ValueError, match="unknown kernel impl"):
+        masked_matmul(x, w, backward="cuda")
+
+
+# ---------------------------------------------------------------------------
+# spring_matmul / spring_conv2d routing under SpringConfig.backward_sparsity.
+# ---------------------------------------------------------------------------
+
+
+def _cfgs(bwd: str):
+    on = dataclasses.replace(QUANT_SPARSE, backward_sparsity=bwd)
+    off = dataclasses.replace(QUANT_SPARSE, backward_sparsity="none")
+    return on, off
+
+
+@pytest.mark.grad_parity
+@pytest.mark.parametrize("impl", BWD_IMPLS)
+def test_spring_matmul_backward_matches_dense_autodiff(impl):
+    """Forward numerics are bit-identical between backward_sparsity=impl
+    and "none" (both lower to the dense fp32 matmul + STE epilogue on
+    CPU), and the sparsity-aware gradient is allclose to autodiff."""
+    on, off = _cfgs(impl)
+    x = jax.nn.relu(_sparse(6, (64, 48), 0.5) * 10)
+    w = _sparse(7, (48, 32), 1.0)
+
+    def loss(cfg):
+        def f(x, w):
+            y = spring_matmul(x, w, cfg, KeyGen(jax.random.PRNGKey(11)))
+            return jnp.sum(jax.nn.relu(y) ** 2)
+        return f
+
+    y_on = spring_matmul(x, w, on, KeyGen(jax.random.PRNGKey(11)))
+    y_off = spring_matmul(x, w, off, KeyGen(jax.random.PRNGKey(11)))
+    np.testing.assert_array_equal(np.asarray(y_on), np.asarray(y_off))
+
+    g_on = jax.grad(loss(on), argnums=(0, 1))(x, w)
+    g_off = jax.grad(loss(off), argnums=(0, 1))(x, w)
+    for a, b in zip(g_on, g_off):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.grad_parity
+def test_spring_conv2d_backward_matches_dense_autodiff():
+    """Both conv backward GEMMs (dX via dilated cotangent patches, dW via
+    im2col of the stashed activation) match the dense conv VJP."""
+    on, off = _cfgs("interpret")
+    x = jax.nn.relu(_sparse(8, (2, 12, 12, 8), 0.5) * 10)
+    w = _sparse(9, (3, 3, 8, 16), 1.0)
+
+    for stride, padding in [((1, 1), "SAME"), ((2, 2), "SAME"), ((1, 1), "VALID")]:
+        def loss(cfg):
+            def f(x, w):
+                y = spring_conv2d(x, w, cfg, KeyGen(jax.random.PRNGKey(13)),
+                                  stride=stride, padding=padding)
+                return jnp.sum(jax.nn.relu(y) ** 2)
+            return f
+
+        g_on = jax.grad(loss(on), argnums=(0, 1))(x, w)
+        g_off = jax.grad(loss(off), argnums=(0, 1))(x, w)
+        for a, b in zip(g_on, g_off):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5,
+                atol=1e-5 * float(np.max(np.abs(np.asarray(b))) + 1.0))
+
+
+@pytest.mark.grad_parity
+def test_grouped_conv_falls_back_to_dense_autodiff():
+    """Depthwise convs keep the dense VJP (patch matrices interleave
+    groups) — gradients must still flow and match."""
+    on, off = _cfgs("auto")
+    x = jax.nn.relu(_sparse(10, (2, 8, 8, 8), 0.5) * 10)
+    w = _sparse(11, (3, 3, 1, 8), 1.0)
+
+    def loss(cfg):
+        def f(x, w):
+            y = spring_conv2d(x, w, cfg, KeyGen(jax.random.PRNGKey(17)),
+                              feature_group_count=8)
+            return jnp.sum(y ** 2)
+        return f
+
+    g_on = jax.grad(loss(on), argnums=(0, 1))(x, w)
+    g_off = jax.grad(loss(off), argnums=(0, 1))(x, w)
+    for a, b in zip(g_on, g_off):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_spring_config_validates_backward_sparsity():
+    for name in BACKWARD_SPARSITY_CHOICES:
+        SpringConfig(backward_sparsity=name)
+    with pytest.raises(ValueError, match="backward_sparsity"):
+        SpringConfig(backward_sparsity="cuda")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end acceptance: stash/masked conv+fc model, backward_sparsity
+# pinned to the tile-skipping kernel, vs the dense ref gradient.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.grad_parity
+def test_conv_fc_model_grad_parity_with_stash():
+    """jax.grad through a stash/masked conv+fc model with
+    backward_sparsity="interpret" (the CPU stand-in for "pallas") is
+    allclose (rtol 1e-5) to the dense ref gradient, with the memstash
+    compressed-activation stash active at every conv/fc point."""
+    from repro.memstash.config import MemstashConfig
+    from repro.models.cnn import ParamStore, conv, fc
+    from repro.models.layers import SpringContext
+
+    def model(store, ctx, x):
+        h = conv(store, ctx, "c1", x, 8, k=3)
+        h = conv(store, ctx, "c2", h, 8, k=3, stride=2)
+        h = h.reshape(h.shape[0], -1)
+        h = fc(store, ctx, "f1", h, 32, relu=True)
+        return fc(store, ctx, "f2", h, 10)
+
+    key = jax.random.PRNGKey(0)
+    x = jax.nn.relu(jax.random.normal(key, (2, 8, 8, 3)))
+    init_store = ParamStore(jax.random.fold_in(key, 1))
+    model(init_store, SpringContext(), x)
+    params = init_store.params
+
+    def loss(params, bwd):
+        cfg = dataclasses.replace(QUANT_SPARSE, backward_sparsity=bwd)
+        ctx = SpringContext(cfg=cfg, keys=KeyGen(jax.random.PRNGKey(2)),
+                            memstash=MemstashConfig(policy="stash"))
+        assert ctx.backward_sparsity() == bwd
+        y = model(ParamStore(key, params), ctx, x)
+        return jnp.mean(y ** 2)
+
+    g_sparse = jax.grad(lambda p: loss(p, "interpret"))(params)
+    g_ref = jax.grad(lambda p: loss(p, "none"))(params)
+    for name in params:
+        np.testing.assert_allclose(
+            np.asarray(g_sparse[name]), np.asarray(g_ref[name]),
+            rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+@pytest.mark.grad_parity
+def test_step_config_threads_backward_sparsity_into_train_step():
+    """StepConfig.backward_sparsity reaches the spring config the train
+    step builds its contexts from (the --backward-sparsity CLI path)."""
+    from repro.runtime.train import StepConfig, _spring_for
+
+    cfg = StepConfig(spring=QUANT_SPARSE, backward_sparsity="interpret")
+    assert _spring_for(cfg).backward_sparsity == "interpret"
+    # default (None): inherit the SpringConfig switch untouched, both for
+    # the "auto" default and for an explicitly-disabled spring config
+    cfg2 = StepConfig(spring=QUANT_SPARSE)
+    assert _spring_for(cfg2) is QUANT_SPARSE
+    off = dataclasses.replace(QUANT_SPARSE, backward_sparsity="none")
+    assert _spring_for(StepConfig(spring=off)).backward_sparsity == "none"
+
+
+@pytest.mark.grad_parity
+def test_sparsity_probe_reports_nonzero_backward_skip():
+    """The dry-run's eager probe: at 50% tile-granular density the
+    backward GEMMs skip a nonzero fraction of MXU grid steps (the
+    acceptance criterion's dryrun JSON field)."""
+    p = sparsity_probe(density=0.5, size=256)
+    assert p["forward_tile_skip"] is not None and p["forward_tile_skip"] > 0.0
+    assert p["backward_tile_skip"] is not None and p["backward_tile_skip"] > 0.0
+    assert p["backward_tile_skip_dx"] > 0.0
+    assert p["backward_tile_skip_dw"] > 0.0
+    # denser operands skip less
+    p_dense = sparsity_probe(density=1.0, size=256)
+    assert p_dense["backward_tile_skip"] <= p["backward_tile_skip"]
+
+
+@pytest.mark.grad_parity
+def test_measured_backward_skip_feeds_perfmodel():
+    """measured_backward_skip_fraction -> spring_eval: the training-time
+    compute term scales as fwd + 2x bwd with independent skip fractions."""
+    from repro.models.cnn import LayerRecord
+    from repro.perfmodel.spring_model import (
+        measured_backward_skip_fraction,
+        spring_eval,
+    )
+
+    x = jnp.zeros((256, 256)).at[:128, :128].set(1.0)
+    w = jnp.ones((256, 256))
+    with registry.record_kernel_metrics():
+        pass
+    with registry.record_kernel_metrics() as rows:
+        jax.grad(lambda x: jnp.sum(masked_matmul(
+            x, w, apply_sr=False, impl="ref", backward="auto") ** 2))(x)
+    bskip = measured_backward_skip_fraction(rows)
+    assert bskip is not None and 0.0 <= bskip < 1.0
+    assert measured_backward_skip_fraction([]) is None
+
+    rec = LayerRecord(kind="fc", name="l", macs=10**12,
+                      in_elems=10, w_elems=10, out_elems=10)
+    base = spring_eval([rec], 1, training=True,
+                       act_sparsity=0.0, w_sparsity=0.0)
+    meas = spring_eval([rec], 1, training=True, act_sparsity=0.0,
+                       w_sparsity=0.0, backward_skip_fraction=0.5)
+    # fwd 1x unscaled + bwd 2x at (1-0.5): 2/3 of the dense-training time
+    np.testing.assert_allclose(meas.time_s, base.time_s * (2.0 / 3.0),
+                               rtol=1e-6)
