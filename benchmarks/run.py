@@ -40,17 +40,19 @@ def main() -> None:
         bench_kernels,
         bench_memstash,
         bench_paper_figs,
+        bench_serving,
         bench_sr_training,
         bench_table1,
     )
 
     suites = [bench_table1, bench_paper_figs, bench_compression, bench_memstash,
-              bench_kernels]
+              bench_kernels, bench_serving]
     if not skip_slow:
         suites.append(bench_sr_training)
 
     import jax
 
+    from benchmarks.bench_serving import ARCH as ARCH_SERVE
     from repro.kernels import registry
 
     print("name,us_per_call,derived")
@@ -77,11 +79,24 @@ def main() -> None:
             r["name"]: r["derived"] for r in records
             if "masked_matmul_dx" in r["name"] or "masked_matmul_dw" in r["name"]
         }
+        # serving attribution: engine throughput + the compressed KV
+        # pool's measured wire bytes, keyed off the bench_serving rows
+        by_name = {r["name"]: r["derived"] for r in records}
+        serving = {
+            "tokens_per_s": by_name.get(f"serving.engine.{ARCH_SERVE}.tok_s"),
+            "kv_wire_bytes": by_name.get(
+                f"serving.engine.{ARCH_SERVE}.kv_wire_bytes"),
+            "kv_traffic_reduction_vs_fp32": by_name.get(
+                f"serving.engine.{ARCH_SERVE}.kv_traffic_x"),
+            "mean_occupancy": by_name.get(
+                f"serving.engine.{ARCH_SERVE}.occupancy"),
+        }
         payload = {
             "backend": jax.default_backend(),
             "kernel_policy": registry.current_policy().describe(),
             "kernel_impls": registry.resolution_table(),
             "backward_tile_skip": backward_skip,
+            "serving": serving,
             "rows": records,
             "failures": failures,
         }

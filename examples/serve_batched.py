@@ -1,7 +1,10 @@
-"""Batched serving demo: prefill a batch of prompts, decode with the
-quantized KV-serving path, report latency/throughput.
+"""Continuous-batching serving demo: submit a queue of prompts over a
+fixed slot pool, decode with the sparsity-compressed KV cache, report
+latency/throughput/compression.
 
-  PYTHONPATH=src python examples/serve_batched.py --arch mamba2-780m --gen 24
+  PYTHONPATH=src python examples/serve_batched.py --arch llama3.2-1b \
+      --batch 4 --slots 2 --queue 6 --gen 24 --mode quant_sparse \
+      --kernel-impl ref --seed 7
 """
 
 import argparse
@@ -9,22 +12,43 @@ import argparse
 from repro.launch.serve import serve_session
 
 
-def main():
+def main(argv: list | None = None):
+    """CLI entry point; ``main(argv=[...])`` is the smoke-test path."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mode", default="dense", choices=["dense", "quant", "quant_sparse"])
-    args = ap.parse_args()
+    ap.add_argument("--kernel-impl", default=None,
+                    help="kernel-dispatch policy, e.g. 'ref' (default: auto)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="engine slot-pool size (default: --batch)")
+    ap.add_argument("--queue", type=int, default=None,
+                    help="total requests (default: --batch); surplus joins mid-flight")
+    ap.add_argument("--greedy", dest="greedy", action="store_true", default=True)
+    ap.add_argument("--sample", dest="greedy", action="store_false",
+                    help="sample with per-request PRNG keys")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
 
     out = serve_session(args.arch, reduced=True, batch=args.batch,
-                        prompt_len=args.prompt_len, gen=args.gen, mode=args.mode)
-    print(f"arch={args.arch} mode={args.mode}")
-    print(f"  prefill: {out['prefill_s']*1e3:8.1f} ms  ({args.batch} x {args.prompt_len} tokens)")
+                        prompt_len=args.prompt_len, gen=args.gen,
+                        mode=args.mode, kernel_impl=args.kernel_impl,
+                        greedy=args.greedy, seed=args.seed,
+                        slots=args.slots, queue=args.queue)
+    print(f"arch={args.arch} mode={args.mode} slots={out.get('slots', args.batch)}")
+    print(f"  prefill: {out['prefill_s']*1e3:8.1f} ms")
     print(f"  decode:  {out['decode_s']*1e3:8.1f} ms  ({out['tokens_per_s']:.1f} tok/s)")
+    if out.get("engine"):
+        lat = sorted(r["latency_s"] for r in out["per_request"])
+        print(f"  latency: p50 {lat[len(lat)//2]*1e3:.0f} ms  "
+              f"p100 {lat[-1]*1e3:.0f} ms  occupancy {out['mean_occupancy']:.2f}")
+        print(f"  kv:      {out['kv_mean_wire_bytes']/1e3:.1f} KB/step wire, "
+              f"{out['kv_traffic_reduction_vs_fp32']:.2f}x less than dense fp32")
     print(f"  sample:  {out['generated'][0][:10].tolist()}")
     assert out["finite"]
+    return out
 
 
 if __name__ == "__main__":

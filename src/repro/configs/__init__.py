@@ -1,7 +1,14 @@
 """Architecture registry: the 10 assigned archs (+ paper CNNs)."""
 
-from repro.configs.base import SHAPES, ArchDef, MemstashConfig, ShapeSpec, default_memstash
+from repro.configs.base import (
+    SHAPES,
+    ArchDef,
+    MemstashConfig,
+    ResolvedArch,
+    ShapeSpec,
+    default_memstash,
+)
 from repro.configs.registry import ARCHS, get_arch
 
-__all__ = ["SHAPES", "ArchDef", "MemstashConfig", "ShapeSpec", "ARCHS",
-           "default_memstash", "get_arch"]
+__all__ = ["SHAPES", "ArchDef", "MemstashConfig", "ResolvedArch", "ShapeSpec",
+           "ARCHS", "default_memstash", "get_arch"]

@@ -52,6 +52,20 @@ SHAPES: dict[str, ShapeSpec] = {
 
 
 @dataclasses.dataclass(frozen=True)
+class ResolvedArch:
+    """An arch view with one concrete config picked (full or reduced, or
+    a launcher-modified copy).  This is what the step builders consume —
+    it replaced the per-launcher ``class _A`` closure shims.  ``reduced()``
+    returns the same config: resolution already happened."""
+
+    is_encdec: bool
+    config: Union[LMConfig, EncDecConfig]
+
+    def reduced(self) -> Union[LMConfig, EncDecConfig]:
+        return self.config
+
+
+@dataclasses.dataclass(frozen=True)
 class ArchDef:
     arch_id: str
     family: str  # dense | hybrid | vlm | moe | ssm | audio
@@ -68,6 +82,12 @@ class ArchDef:
         if self.config.supports_long_context:
             out.append("long_500k")
         return out
+
+    def view(self, reduced: bool = False, config=None) -> ResolvedArch:
+        """Resolve to a concrete-config arch view (``config`` overrides)."""
+        if config is None:
+            config = self.reduced() if reduced else self.config
+        return ResolvedArch(self.is_encdec, config)
 
     def skipped_shapes(self) -> dict[str, str]:
         if not self.config.supports_long_context:

@@ -63,6 +63,7 @@ _OP_MODULES = (
     "repro.kernels.masked_matmul.ops",
     "repro.kernels.masked_matmul.backward",
     "repro.kernels.mask_compress.ops",
+    "repro.kernels.kv_cache.ops",
     "repro.kernels.stochastic_round.ops",
     "repro.kernels.flash_attention.ops",
     "repro.kernels.ssd_scan.ops",

@@ -308,6 +308,13 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
         from repro.kernels.masked_matmul.backward import sparsity_probe
 
         result["sparsity_probe"] = sparsity_probe(probe_density, size=256)
+    if mode == "quant_sparse" and sh.kind == "decode":
+        # Serving twin of the sparsity probe: measured KV wire bytes of
+        # one packed block at the probe density, with the 20d+1 formula
+        # cross-check (roofline_report renders the table).
+        from repro.kernels.kv_cache.ops import kv_probe
+
+        result["kv_probe"] = kv_probe(probe_density)
     if verbose:
         print(json.dumps(result, indent=2))
         print(f"peak bytes/chip (arg+out+temp-alias): {mem['peak_bytes_per_chip_est']/1e9:.3f} GB", file=sys.stderr)

@@ -136,6 +136,51 @@ def backward_sparsity_table(rows: list[dict]) -> str:
     return "\n".join(lines) if any_row else ""
 
 
+def kv_cache_table(rows: list[dict]) -> str:
+    """Render per-cell serving KV-compression probes (dry-run ``kv_probe``
+    emitted for quant_sparse decode cells since spring-serve landed;
+    older JSONs without the field are skipped)."""
+    lines = [
+        "| arch | shape | impl | density | wire KB | vs fp32 | wire/formula |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    any_row = False
+    for r in rows:
+        p = r.get("kv_probe")
+        if r.get("status") != "ok" or not p:
+            continue
+        any_row = True
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {p.get('impl', '-')} "
+            f"| {p['density']:.2f} | {p['wire_bytes']/1e3:.1f} "
+            f"| {p['compression_vs_fp32']:.2f}x | {p['wire_vs_formula']:.4f} |")
+    return "\n".join(lines) if any_row else ""
+
+
+def serving_table(results: list[dict]) -> str:
+    """Render ``repro.launch.serve --json`` engine sessions: per-request
+    latency percentiles, throughput, slot occupancy and measured KV
+    wire traffic of the compressed pool."""
+    lines = [
+        "| mode | slots | requests | tok/s | occupancy | p50 ms | p100 ms | KV wire/step | vs fp32 |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    any_row = False
+    for r in results:
+        reqs = r.get("per_request")
+        if not r.get("engine") or not reqs:
+            continue
+        any_row = True
+        lat = sorted(q["latency_s"] for q in reqs)
+        lines.append(
+            f"| {r.get('mode', '-')} | {r.get('slots', '-')} | {len(reqs)} "
+            f"| {r['tokens_per_s']:.1f} | {r['mean_occupancy']:.2f} "
+            f"| {lat[len(lat)//2]*1e3:.0f} | {lat[-1]*1e3:.0f} "
+            f"| {r['kv_mean_wire_bytes']/1e3:.1f}KB "
+            f"| {r['kv_traffic_reduction_vs_fp32']:.2f}x |")
+    return "\n".join(lines) if any_row else ""
+
+
 def pick_hillclimb(rows: list[dict]) -> list[str]:
     ok = [r for r in rows if r["status"] == "ok" and r["mesh"] == "single"]
     notes = []
@@ -167,6 +212,10 @@ def main():
     if bt:
         print("\n## Backward sparsity (measured tile-skip, fwd vs dX/dW)\n")
         print(bt)
+    kv = kv_cache_table(rows)
+    if kv:
+        print("\n## Serving KV cache (measured compression probes)\n")
+        print(kv)
     print("\n## Hillclimb candidates\n")
     for n in pick_hillclimb(rows):
         print("-", n)
@@ -176,6 +225,14 @@ def main():
     if ms_rows:
         print("\n## Memstash (compressed activation stash)\n")
         print(memstash_table(ms_rows))
+    # engine sessions live next to the dry-run dir (results/serving),
+    # written by `repro.launch.serve --json`
+    sv_dir = os.path.join(os.path.dirname(os.path.normpath(d)) or ".", "serving")
+    sv_rows = load_all(sv_dir)
+    st = serving_table(sv_rows)
+    if st:
+        print("\n## Serving engine sessions\n")
+        print(st)
 
 
 if __name__ == "__main__":

@@ -1,29 +1,68 @@
-"""Serving launcher: batched prefill + decode loop with the SPRING
-numerics modes, runnable on CPU with reduced configs.
+"""Serving launcher: the spring-serve continuous-batching engine with the
+SPRING numerics modes, runnable on CPU with reduced configs.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-      --reduced --batch 4 --prompt-len 32 --gen 16
+      --reduced --batch 4 --slots 2 --prompt-len 32 --gen 16 \
+      --mode quant_sparse --kernel-impl ref
+
+``serve_session`` is a one-shot wrapper over :class:`ServingEngine`: it
+submits a synthetic batch of requests and drains the queue.  The
+pre-refactor static batch loop survives as
+:func:`static_reference_session` — the oracle the parity suite
+(tests/test_serving.py) seals the engine against, and the fallback for
+encoder-decoder archs (the engine serves decoder-only LMs).
+
+Serving numerics: quantized modes round to nearest (DESIGN.md §9) so a
+request's tokens are a function of the request alone, not of its batch
+co-tenants.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.core.spring_ops import DENSE, QUANT, QUANT_SPARSE
+from repro.core.spring_ops import DENSE, QUANT, QUANT_SPARSE, SpringConfig
 from repro.kernels.registry import KernelPolicy
 from repro.optim.optimizers import OptimizerConfig
-from repro.runtime.train import StepConfig, make_decode_step, make_prefill_step
+from repro.runtime.train import StepConfig
+from repro.serving.engine import ServingEngine
+from repro.serving.steps import make_decode_step, make_prefill_step
 
 MODES = {"dense": DENSE, "quant": QUANT, "quant_sparse": QUANT_SPARSE}
 
 
-def serve_session(
+def serving_config(mode: str, kernel_impl: str | None = None) -> SpringConfig:
+    """SpringConfig for serving: the chosen mode with deterministic
+    (nearest) rounding — SR is training's convergence device; at serving
+    time it would couple a request's tokens to its batch co-tenants."""
+    return dataclasses.replace(
+        MODES[mode], stochastic=False,
+        kernels=KernelPolicy.parse(kernel_impl or ""))
+
+
+def _synthetic_batch(arch, cfg, batch: int, prompt_len: int, key) -> dict:
+    """The launcher's stand-in traffic (same construction the static path
+    always used, so engine/static parity runs on identical prompts)."""
+    if arch.is_encdec:
+        return {
+            "frames": jax.random.normal(key, (batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab),
+        }
+    out = {"tokens": jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab)}
+    if cfg.vlm_prefix_len:
+        out["img_embeds"] = jax.random.normal(
+            key, (batch, cfg.vlm_prefix_len, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def static_reference_session(
     arch_id: str,
     *,
     reduced: bool = True,
@@ -31,25 +70,19 @@ def serve_session(
     prompt_len: int = 32,
     gen: int = 16,
     mode: str = "dense",
-    kernel_impl: str | None = None,  # KernelPolicy spec, e.g. "ref"
+    kernel_impl: str | None = None,
     greedy: bool = True,
     seed: int = 0,
     mesh=None,
 ) -> dict:
+    """The pre-engine static path: one fixed batch, prefill once, decode
+    ``gen`` steps, throw the cache away.  Kept verbatim as (a) the parity
+    oracle the engine is sealed against and (b) the encdec fallback."""
     arch = get_arch(arch_id)
-    cfg = arch.reduced() if reduced else arch.config
-
-    class _A:
-        is_encdec = arch.is_encdec
-        config = cfg
-
-        @staticmethod
-        def reduced():
-            return cfg
-
-    spring_cfg = dataclasses.replace(
-        MODES[mode], kernels=KernelPolicy.parse(kernel_impl or ""))
-    step_cfg = StepConfig(spring=spring_cfg, optimizer=OptimizerConfig())
+    view = arch.view(reduced=reduced)
+    cfg = view.config
+    step_cfg = StepConfig(spring=serving_config(mode, kernel_impl),
+                          optimizer=OptimizerConfig())
     key = jax.random.PRNGKey(seed)
 
     from repro.models import encdec as ed_mod
@@ -57,20 +90,10 @@ def serve_session(
 
     init = ed_mod.encdec_init if arch.is_encdec else lm_mod.lm_init
     params = init(key, cfg)
+    batch_inputs = _synthetic_batch(arch, cfg, batch, prompt_len, key)
 
-    if arch.is_encdec:
-        batch_inputs = {
-            "frames": jax.random.normal(key, (batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16),
-            "tokens": jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab),
-        }
-    else:
-        batch_inputs = {"tokens": jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab)}
-        if cfg.vlm_prefix_len:
-            batch_inputs["img_embeds"] = jax.random.normal(
-                key, (batch, cfg.vlm_prefix_len, cfg.d_model), jnp.bfloat16)
-
-    prefill = jax.jit(make_prefill_step(_A, step_cfg, mesh=mesh, reduced=True))
-    decode = jax.jit(make_decode_step(_A, step_cfg, mesh=mesh, reduced=True))
+    prefill = jax.jit(make_prefill_step(view, step_cfg, mesh=mesh, reduced=True))
+    decode = jax.jit(make_decode_step(view, step_cfg, mesh=mesh, reduced=True))
 
     t0 = time.monotonic()
     if arch.is_encdec:
@@ -106,7 +129,77 @@ def serve_session(
         "decode_s": t_decode,
         "tokens_per_s": batch * gen / t_decode if t_decode else 0.0,
         "finite": bool(jnp.all(jnp.isfinite(logits))),
+        "engine": False,
     }
+
+
+def serve_session(
+    arch_id: str,
+    *,
+    reduced: bool = True,
+    batch: int = 4,
+    prompt_len: int = 32,
+    gen: int = 16,
+    mode: str = "dense",
+    kernel_impl: str | None = None,
+    greedy: bool = True,
+    seed: int = 0,
+    slots: int | None = None,
+    queue: int | None = None,
+    mesh=None,
+) -> dict:
+    """One-shot engine session: submit ``queue`` synthetic requests (default
+    ``batch``) over a pool of ``slots`` slots (default ``batch``) and drain.
+
+    Returns the legacy result surface (``generated``/``prefill_s``/
+    ``decode_s``/``tokens_per_s``/``finite``) plus the engine's metrics
+    (per-request latency, occupancy, KV wire bytes & compression).
+    """
+    arch = get_arch(arch_id)
+    if arch.is_encdec:
+        # encoder-decoder archs keep the static loop (DESIGN.md §9 scope)
+        return static_reference_session(
+            arch_id, reduced=reduced, batch=batch, prompt_len=prompt_len,
+            gen=gen, mode=mode, kernel_impl=kernel_impl, greedy=greedy,
+            seed=seed, mesh=mesh)
+
+    view = arch.view(reduced=reduced)
+    cfg = view.config
+    # None means "default to batch"; an explicit 0 must reach the engine's
+    # own validation rather than being silently replaced
+    n_requests = batch if queue is None else queue
+    n_slots = batch if slots is None else slots
+    step_cfg = StepConfig(spring=serving_config(mode, kernel_impl),
+                          optimizer=OptimizerConfig())
+    key = jax.random.PRNGKey(seed)
+
+    from repro.models.lm import lm_init
+
+    params = lm_init(key, cfg)
+    # queued requests beyond the first batch reuse the synthetic
+    # construction with a folded key (distinct prompts, reproducible)
+    prompts = []
+    img = []
+    for chunk in range((n_requests + batch - 1) // batch):
+        bi = _synthetic_batch(arch, cfg, batch, prompt_len,
+                              jax.random.fold_in(key, chunk) if chunk else key)
+        for b in range(batch):
+            prompts.append([int(t) for t in bi["tokens"][b]])
+            img.append(bi.get("img_embeds")[b] if "img_embeds" in bi else None)
+    prompts, img = prompts[:n_requests], img[:n_requests]
+
+    engine = ServingEngine(view, step_cfg, params=params, n_slots=n_slots,
+                           max_len=prompt_len + gen + 1, greedy=greedy,
+                           mesh=mesh, reduced=False, seed=seed)
+    for i, p in enumerate(prompts):
+        engine.submit_prompt(p, gen, seed=seed + i, img_embeds=img[i])
+    out = engine.run()
+    out["generated"] = jnp.asarray(
+        [r["tokens"] for r in out["per_request"]], jnp.int32)
+    out["engine"] = True
+    out["slots"] = n_slots
+    out["mode"] = mode
+    return out
 
 
 def main():
@@ -120,13 +213,44 @@ def main():
     ap.add_argument("--kernel-impl", default=None,
                     help="kernel-dispatch policy, e.g. 'ref', 'interpret', "
                          "'ssd_scan=jnp' (default: auto)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="engine slot-pool size (default: --batch)")
+    ap.add_argument("--queue", type=int, default=None,
+                    help="total requests to submit (default: --batch); the "
+                         "surplus waits FCFS and joins mid-flight")
+    ap.add_argument("--greedy", dest="greedy", action="store_true", default=True)
+    ap.add_argument("--sample", dest="greedy", action="store_false",
+                    help="sample with each request's own PRNG key")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--static", action="store_true",
+                    help="run the pre-engine static reference path")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the full engine metrics as JSON (write into "
+                         "results/serving/ for roofline_report to render "
+                         "the 'Serving engine sessions' table)")
     args = ap.parse_args()
-    out = serve_session(args.arch, reduced=args.reduced, batch=args.batch,
-                        prompt_len=args.prompt_len, gen=args.gen, mode=args.mode,
-                        kernel_impl=args.kernel_impl)
+    fn = static_reference_session if args.static else serve_session
+    kw = {} if args.static else {"slots": args.slots, "queue": args.queue}
+    out = fn(args.arch, reduced=args.reduced, batch=args.batch,
+             prompt_len=args.prompt_len, gen=args.gen, mode=args.mode,
+             kernel_impl=args.kernel_impl, greedy=args.greedy,
+             seed=args.seed, **kw)
     print(f"prefill {out['prefill_s']*1e3:.1f}ms, decode {out['decode_s']*1e3:.1f}ms "
           f"({out['tokens_per_s']:.1f} tok/s), finite={out['finite']}")
+    if out.get("engine"):
+        lat = [r["latency_s"] for r in out["per_request"]]
+        print(f"requests {len(lat)} over {out['slots']} slots: "
+              f"occupancy {out['mean_occupancy']:.2f}, "
+              f"p50 latency {sorted(lat)[len(lat)//2]*1e3:.0f}ms, "
+              f"KV wire {out['kv_mean_wire_bytes']/1e6:.2f}MB/step "
+              f"({out['kv_traffic_reduction_vs_fp32']:.2f}x less traffic "
+              f"than a dense fp32 pool)")
     print("sample tokens:", out["generated"][0][:12])
+    if args.json:
+        payload = {k: v for k, v in out.items() if k != "generated"}
+        payload["generated_first"] = [int(t) for t in out["generated"][0]]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
 
 
 if __name__ == "__main__":

@@ -81,16 +81,9 @@ def train_loop(
         ),
     )
 
-    class _A:  # arch view with the chosen config (reduced or full)
-        is_encdec = arch.is_encdec
-        config = cfg
-
-        @staticmethod
-        def reduced():
-            return cfg
-
+    view = arch.view(config=cfg)  # arch view with the chosen config
     data = SyntheticLMStream(DataConfig(seed=seed, vocab=cfg.vocab, seq_len=seq, global_batch=batch))
-    state = init_train_state(jax.random.PRNGKey(seed), _A, step_cfg, reduced=True)
+    state = init_train_state(jax.random.PRNGKey(seed), view, step_cfg, reduced=True)
     start_step = 0
 
     manager = CheckpointManager(ckpt_dir, every_steps=ckpt_every) if ckpt_dir else None
@@ -101,7 +94,7 @@ def train_loop(
             state = TrainState(*tree)
             log.info("resumed from step %d", start_step)
 
-    step_fn = jax.jit(make_train_step(_A, step_cfg, mesh=mesh), donate_argnums=(0,))
+    step_fn = jax.jit(make_train_step(view, step_cfg, mesh=mesh), donate_argnums=(0,))
     watchdog = StragglerWatchdog()
     losses = []
     for step in range(start_step, steps):

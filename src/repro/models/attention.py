@@ -25,6 +25,26 @@ from repro.runtime.sharding import constrain
 Q_CHUNK = 1024
 
 
+def _pos_vec(pos: jax.Array, b: int) -> jax.Array:
+    """Decode position(s) as a (B,) vector.
+
+    The static serving path passes one scalar position for the whole
+    batch; the continuous-batching engine passes a per-slot (B,) vector
+    (slots sit at different depths mid-flight).  All decode-branch math is
+    written against the vector form; a scalar broadcasts to it, so the
+    two paths share one lowering and stay bit-identical when every row is
+    at the same position.
+    """
+    return jnp.broadcast_to(pos, (b,)).astype(jnp.int32)
+
+
+def _row_update(cache_leaf: jax.Array, new: jax.Array, slot_v: jax.Array) -> jax.Array:
+    """Write row b's single new entry at seq index ``slot_v[b]``."""
+    b = new.shape[0]
+    return cache_leaf.at[jnp.arange(b), slot_v].set(
+        new[:, 0].astype(cache_leaf.dtype))
+
+
 def _q8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Per-(batch,seq,head) int8 quantization of cache lines (SPRING P2
     applied to the KV cache: halves decode's HBM floor vs bf16)."""
@@ -181,12 +201,13 @@ def gqa_apply(
                          vn: constrain(vc.astype(jnp.bfloat16), ("cache_batch", "cache_seq", "cache_heads", "head_dim"))}
     elif int8_cache:
         assert s == 1
+        pos_v = _pos_vec(pos, b)
         kq1, ks1 = _q8(k)
         vq1, vs1 = _q8(v)
-        ckq = jax.lax.dynamic_update_slice_in_dim(cache["k_q8"], kq1, pos, axis=1)
-        cks = jax.lax.dynamic_update_slice_in_dim(cache["k_sc"], ks1, pos, axis=1)
-        cvq = jax.lax.dynamic_update_slice_in_dim(cache["v_q8"], vq1, pos, axis=1)
-        cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_sc"], vs1, pos, axis=1)
+        ckq = _row_update(cache["k_q8"], kq1, pos_v)
+        cks = _row_update(cache["k_sc"], ks1, pos_v)
+        cvq = _row_update(cache["v_q8"], vq1, pos_v)
+        cvs = _row_update(cache["v_sc"], vs1, pos_v)
         ckq = constrain(ckq, ("cache_batch", "cache_seq", "cache_heads", "head_dim"))
         cvq = constrain(cvq, ("cache_batch", "cache_seq", "cache_heads", "head_dim"))
         group = h // kv
@@ -196,8 +217,8 @@ def gqa_apply(
         scores = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
                             ckq.astype(jnp.float32))
         scores = scores * jnp.moveaxis(cks.astype(jnp.float32), 1, 2)[:, :, None, :] / (d**0.5)
-        valid = jnp.arange(ckq.shape[1]) <= pos
-        scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        valid = jnp.arange(ckq.shape[1])[None, :] <= pos_v[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
         p = jax.nn.softmax(scores, axis=-1)
         pv = p * jnp.moveaxis(cvs.astype(jnp.float32), 1, 2)[:, :, None, :]
         out = jnp.einsum("bkgs,bskd->bkgd", pv, cvq.astype(jnp.float32))
@@ -205,12 +226,13 @@ def gqa_apply(
         new_cache = {"k_q8": ckq, "k_sc": cks, "v_q8": cvq, "v_sc": cvs}
     else:
         assert s == 1, "decode processes one token per step"
+        pos_v = _pos_vec(pos, b)
         kn = "k_ring" if spec.window is not None else "k"
         vn = "v_ring" if spec.window is not None else "v"
         s_max = cache[kn].shape[1]
-        slot = pos % s_max if spec.window is not None else pos
-        ck = jax.lax.dynamic_update_slice_in_dim(cache[kn], k.astype(cache[kn].dtype), slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache[vn], v.astype(cache[vn].dtype), slot, axis=1)
+        slot_v = pos_v % s_max if spec.window is not None else pos_v
+        ck = _row_update(cache[kn], k, slot_v)
+        cv = _row_update(cache[vn], v, slot_v)
         ck = constrain(ck, ("cache_batch", "cache_seq", "cache_heads", "head_dim"))
         cv = constrain(cv, ("cache_batch", "cache_seq", "cache_heads", "head_dim"))
         group = h // kv
@@ -222,11 +244,11 @@ def gqa_apply(
         if spec.window is not None:
             # ring invariant: slot i holds the latest position p <= pos with
             # p % s_max == i, i.e. p = pos - ((pos - i) mod s_max)
-            abs_pos = pos - jnp.mod(pos - idx, s_max)
-            valid = (abs_pos >= 0) & (abs_pos > pos - spec.window)
+            abs_pos = pos_v[:, None] - jnp.mod(pos_v[:, None] - idx[None, :], s_max)
+            valid = (abs_pos >= 0) & (abs_pos > pos_v[:, None] - spec.window)
         else:
-            valid = idx <= pos
-        scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+            valid = idx[None, :] <= pos_v[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
         p = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bkgs,bskd->bkgd", p, cv.astype(jnp.float32))
         out = out.reshape(b, 1, h, d).astype(x.dtype)
@@ -329,15 +351,16 @@ def mla_apply(
             new_cache = {"ckv": ckv.astype(jnp.bfloat16), "krope": krope.astype(jnp.bfloat16)}
     else:
         assert s == 1
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, axis=1)
-        cr = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope.astype(cache["krope"].dtype), pos, axis=1)
+        pos_v = _pos_vec(pos, b)
+        ck = _row_update(cache["ckv"], ckv, pos_v)
+        cr = _row_update(cache["krope"], krope, pos_v)
         # absorbed decode: project q into the latent space, attend in latent
         q_lat = jnp.einsum("bhd,rhd->bhr", qn[:, 0].astype(jnp.float32), wuk)  # (B,H,rank)
         s_lat = jnp.einsum("bhr,bsr->bhs", q_lat, ck.astype(jnp.float32))
         s_rope = jnp.einsum("bhd,bsd->bhs", qr[:, 0].astype(jnp.float32), cr.astype(jnp.float32))
         scores = (s_lat + s_rope) * scale
-        valid = jnp.arange(ck.shape[1]) <= pos
-        scores = jnp.where(valid[None, None, :], scores, -1e30)
+        valid = jnp.arange(ck.shape[1])[None, :] <= pos_v[:, None]
+        scores = jnp.where(valid[:, None, :], scores, -1e30)
         p = jax.nn.softmax(scores, axis=-1)
         ctx_lat = jnp.einsum("bhs,bsr->bhr", p, ck.astype(jnp.float32))
         out = jnp.einsum("bhr,rhd->bhd", ctx_lat, wuv).reshape(b, 1, h * dv).astype(x.dtype)

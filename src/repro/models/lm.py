@@ -370,11 +370,19 @@ def lm_decode_step(
     cache: dict,
     ctx: SpringContext,
 ) -> tuple[jax.Array, dict]:
-    """One decode step: returns (logits (B, V), updated cache)."""
+    """One decode step: returns (logits (B, V), updated cache).
+
+    ``cache["pos"]`` may be a scalar (static serving: the whole batch sits
+    at one depth) or a (B,) vector (continuous batching: each slot at its
+    own depth).  The two lower to the same per-row math — a scalar is
+    broadcast — so the engine and the static path stay bit-identical.
+    """
     pos = cache["pos"]
     x = embed_apply(params["embed"], tokens[:, None], ctx)
     b = x.shape[0]
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    positions = jnp.broadcast_to(
+        jnp.reshape(pos, (-1, 1)) if getattr(pos, "ndim", 0) else pos,
+        (b, 1)).astype(jnp.int32)
     new_cache: dict[str, Any] = {"pos": pos + 1}
     for i, kind in enumerate(cfg.prefix):
         x, c, _ = block_apply(params[f"prefix_{i}"], x, ctx, cfg, kind, positions,

@@ -149,6 +149,37 @@ def measured_backward_skip_fraction(metric_rows: Iterable[dict]) -> float | None
     return sum(skips) / len(skips) if skips else None
 
 
+def measured_kv_density(metric_rows: Iterable[dict]) -> float | None:
+    """Mean KV-block density out of *eager* ``kv_pack`` instrumentation
+    rows — the dry-run ``kv_probe`` and any block packed outside jit —
+    or None if nothing was packed eagerly inside the recording block.
+    (The engine's own pool packs inside jitted programs, where the hook
+    is deliberately inert; its measured traffic comes from
+    ``serving.kvpool.pool_wire_stats`` in the engine summary instead.)
+
+    The serving counterpart of :func:`measured_skip_fraction`: pass
+    ``act_sparsity=1 - measured_kv_density(rows)`` to :func:`spring_eval`
+    for a decode-phase evaluation so the activation-traffic term
+    (``bits/elem = 20*density + 1``) is grounded in a measured density
+    rather than the paper's 50% assumption.
+    """
+    from repro.kernels.registry import metric_summary
+
+    return metric_summary(list(metric_rows)).get("kv_pack", {}).get("density")
+
+
+def measured_kv_wire_bytes(metric_rows: Iterable[dict]) -> float | None:
+    """Total KV wire bytes the eager ``kv_pack`` hook measured (sum over
+    packed blocks — traffic accumulates, unlike the per-op mean
+    densities), or None if nothing was packed eagerly; same accounting as
+    ``memstash.format.wire_bytes`` and the engine's ``pool_wire_stats``
+    (see :func:`measured_kv_density` for the eager-only caveat)."""
+    rows = [r for r in metric_rows if r.get("op") == "kv_pack"]
+    if not rows:
+        return None
+    return float(sum(r["wire_bytes"] for r in rows))
+
+
 def spring_eval(
     table: Iterable[LayerRecord],
     batch: int,

@@ -208,56 +208,18 @@ def make_train_step(arch, step_cfg: StepConfig, mesh=None, reduced: bool = False
 
 
 # -- serving ----------------------------------------------------------------
+# The serving step builders moved to ``repro.serving.steps`` when the
+# continuous-batching engine landed; re-exported here for the dry-run and
+# existing callers (lazy to keep runtime <-> serving import-cycle-free).
 
 
 def make_prefill_step(arch, step_cfg: StepConfig, mesh=None, reduced: bool = False):
-    cfg = arch.reduced() if reduced else arch.config
+    from repro.serving.steps import make_prefill_step as _mk
 
-    def ctx_for(key):
-        keys = KeyGen(key) if step_cfg.spring.is_quantized else None
-        return SpringContext(cfg=step_cfg.spring, keys=keys,
-                             prune_ratio=step_cfg.prune_ratio,
-                             int8_cache=step_cfg.int8_cache)
-
-    if arch.is_encdec:
-        def prefill(params, batch, key):
-            with sharding_context(mesh, _rules_for(step_cfg)):
-                ctx = ctx_for(key)
-                cache = ed_mod.encdec_init_cache(
-                    params, cfg, batch["frames"], ctx, max_len=batch["tokens"].shape[1]
-                )
-                # teacher-forced pass to fill self-KV is decode-looped in
-                # serving; dry-run measures encoder + cross-KV build + one
-                # full decoder pass (the dominant prefill compute)
-                enc = ed_mod.encode(params, cfg, batch["frames"], ctx)
-                h = ed_mod.decode_hidden(params, cfg, batch["tokens"], enc, ctx)
-                logits = h[:, -1] @ params["embed"]["embedding"].T
-                return logits, cache
-        return prefill
-
-    def prefill(params, batch, key):
-        with sharding_context(mesh, _rules_for(step_cfg)):
-            return lm_mod.lm_prefill(params, cfg, batch["tokens"], ctx_for(key),
-                                     batch.get("img_embeds"))
-    return prefill
+    return _mk(arch, step_cfg, mesh=mesh, reduced=reduced)
 
 
 def make_decode_step(arch, step_cfg: StepConfig, mesh=None, reduced: bool = False):
-    cfg = arch.reduced() if reduced else arch.config
+    from repro.serving.steps import make_decode_step as _mk
 
-    def ctx_for(key):
-        keys = KeyGen(key) if step_cfg.spring.is_quantized else None
-        return SpringContext(cfg=step_cfg.spring, keys=keys,
-                             prune_ratio=step_cfg.prune_ratio,
-                             int8_cache=step_cfg.int8_cache)
-
-    if arch.is_encdec:
-        def decode(params, tokens, cache, key):
-            with sharding_context(mesh, _rules_for(step_cfg)):
-                return ed_mod.encdec_decode_step(params, cfg, tokens, cache, ctx_for(key))
-        return decode
-
-    def decode(params, tokens, cache, key):
-        with sharding_context(mesh, _rules_for(step_cfg)):
-            return lm_mod.lm_decode_step(params, cfg, tokens, cache, ctx_for(key))
-    return decode
+    return _mk(arch, step_cfg, mesh=mesh, reduced=reduced)

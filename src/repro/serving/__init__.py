@@ -1,0 +1,14 @@
+"""spring-serve: continuous-batching inference engine with a
+sparsity-compressed KV cache (DESIGN.md §9).
+
+  request    Request / RequestResult — the unit of serving work
+  scheduler  FCFS slot admission + request lifecycle (pure python,
+             property-tested without jax)
+  kvpool     slot-indexed persistent KV cache, seq-bearing leaves stored
+             binary-mask packed via the kv_pack/kv_unpack registry ops
+  steps      prefill/decode step builders shared with the launchers
+  engine     ServingEngine — joins the scheduler to the jitted steps
+"""
+
+from repro.serving.request import Request, RequestResult  # noqa: F401
+from repro.serving.scheduler import RequestTracker, SlotScheduler  # noqa: F401

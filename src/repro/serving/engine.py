@@ -1,0 +1,257 @@
+"""ServingEngine: continuous batching over a fixed slot pool.
+
+One engine owns
+
+  * a :class:`SlotScheduler` (FCFS admission, mid-flight join/retire),
+  * a packed :mod:`kvpool` (persistent, slot-indexed, binary-mask
+    compressed KV state),
+  * three jitted programs: per-request prefill (batch 1, compiled per
+    prompt length), slot install (prefilled KV written into the pool),
+    and the pooled decode step (unpack -> attend -> merge active rows ->
+    repack, all inside one XLA program).
+
+Serving numerics: quantized modes round to nearest (``stochastic=False``)
+— stochastic rounding draws its noise batch-wide, which would make a
+request's tokens depend on who shares its batch; nearest rounding is
+elementwise, so generation is a function of the request alone (the
+batch-composition invariance tests/test_serving.py seals).  The paper's
+SR argument is about training convergence, not inference.
+
+Token accounting matches the static path it replaced: the prefill's
+argmax/sample is *fed* as the first decode input (not reported), and
+every decode step emits one reported token; ``max_tokens`` bounds the
+reported tokens, EOS is included in them.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import kvpool
+from repro.serving.request import Request, RequestResult
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.steps import make_decode_step, make_prefill_step
+
+
+class ServingEngine:
+    """Continuous-batching engine for decoder-only LM archs.
+
+    ``arch`` is any arch view (``configs.base.ResolvedArch``); encdec
+    archs are served by the one-shot static fallback in ``launch/serve``.
+    """
+
+    def __init__(self, arch, step_cfg, *, params=None, n_slots: int = 4,
+                 max_len: int = 256, greedy: bool = True, mesh=None,
+                 reduced: bool = True, seed: int = 0):
+        assert not arch.is_encdec, "engine serves decoder-only LMs"
+        self.cfg = arch.reduced() if reduced else arch.config
+        self.step_cfg = step_cfg
+        self.greedy = greedy
+        self.n_slots = n_slots
+        self.max_len = max_len
+        if params is None:
+            from repro.models.lm import lm_init
+
+            params = lm_init(jax.random.PRNGKey(seed), self.cfg)
+        self.params = params
+
+        # KV-pool ops honor the config-threaded KernelPolicy like every
+        # other registry op (CLI --kernel-impl pins them too); resolution
+        # happens once here, planning-style, like SpringContext.kernel_impl
+        from repro.kernels import registry
+
+        pol = step_cfg.spring.kernels
+        self._kv_pack_impl = registry.resolve_with(pol, "kv_pack").name
+        self._kv_unpack_impl = registry.resolve_with(pol, "kv_unpack").name
+
+        self.sched = SlotScheduler(n_slots)
+        self.pool = kvpool.init_pool(self.cfg, n_slots, max_len,
+                                     impl=self._kv_pack_impl)
+        self._next_tok = np.zeros((n_slots,), np.int64)
+        self._results: dict[int, RequestResult] = {}
+        self._requests: dict[int, Request] = {}
+        self._next_rid = 0
+        self._t0 = time.monotonic()
+
+        self._prefill = jax.jit(make_prefill_step(arch, step_cfg, mesh=mesh,
+                                                  reduced=reduced))
+        decode = make_decode_step(arch, step_cfg, mesh=mesh, reduced=reduced)
+
+        def pooled_decode(params, tokens, pool, active, key):
+            cache = kvpool.unpack_cache(pool, self._kv_unpack_impl)
+            logits, new_cache = decode(params, tokens, cache, key)
+            merged = kvpool.merge_active(new_cache, cache, active)
+            return logits, kvpool.pack_cache(merged, self._kv_pack_impl)
+
+        def install(pool, prefill_cache, slot, prompt_len):
+            # packed splice: only the new slot's blocks are (re)packed
+            return kvpool.install_packed(pool, prefill_cache, slot,
+                                         prompt_len, impl=self._kv_pack_impl)
+
+        self._decode = jax.jit(pooled_decode)
+        self._install = jax.jit(install)
+        self._release = jax.jit(kvpool.release_packed)
+
+        # metrics
+        self.decode_steps = 0
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        self.occupancy_sum = 0.0
+        self.tokens_emitted = 0
+        self.peak_kv_wire_bytes = 0.0
+        self._peak_stats: Optional[dict] = None
+        self._wire_bytes_sum = 0.0
+        self._density_sum = 0.0
+        self.finite = True
+
+    # -- submission ---------------------------------------------------------
+
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def submit(self, req: Request) -> int:
+        if len(req.prompt) + req.max_tokens + 1 > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_tokens "
+                f"{req.max_tokens} + 1 exceeds pool max_len {self.max_len}")
+        self.sched.submit(req)
+        self._requests[req.rid] = req
+        self._results[req.rid] = RequestResult(rid=req.rid, tokens=[],
+                                               submit_s=self._now())
+        return req.rid
+
+    def submit_prompt(self, prompt, max_tokens: int, **kw) -> int:
+        rid = self._next_rid
+        self._next_rid = rid + 1
+        return self.submit(Request(rid=rid,
+                                   prompt=tuple(int(t) for t in prompt),
+                                   max_tokens=max_tokens, **kw))
+
+    # -- one scheduler tick: admissions + one pooled decode step ------------
+
+    def _sample(self, tracker, row_logits, draw_idx: int) -> int:
+        """``draw_idx`` counts the request's draws (0 = the fed prefill
+        token, 1.. = decode emissions) so no two draws share a key."""
+        if self.greedy:
+            return int(jnp.argmax(row_logits, -1))
+        key = jax.random.fold_in(jax.random.PRNGKey(tracker.req.seed), draw_idx)
+        return int(jax.random.categorical(key, row_logits))
+
+    def step(self) -> None:
+        for tracker in self.sched.admit():
+            req = tracker.req
+            t0 = time.monotonic()
+            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+            if req.img_embeds is not None:
+                batch["img_embeds"] = jnp.asarray(req.img_embeds)[None]
+            logits, pcache = self._prefill(
+                self.params, batch, jax.random.PRNGKey(req.seed))
+            self.pool = self._install(self.pool, pcache,
+                                      jnp.asarray(tracker.slot, jnp.int32),
+                                      len(req.prompt))
+            jax.block_until_ready(jax.tree_util.tree_leaves(self.pool)[0])
+            self.prefill_s += time.monotonic() - t0
+            # the prefill token is fed, not reported (static-path contract)
+            self._next_tok[tracker.slot] = self._sample(tracker, logits[0], 0)
+            self._results[req.rid].admit_s = self._now()
+            self._results[req.rid].slot = tracker.slot
+
+        if not self.sched.active:
+            return
+        active_slots = sorted(self.sched.active)
+        active = np.zeros((self.n_slots,), bool)
+        active[active_slots] = True
+        t0 = time.monotonic()
+        logits, self.pool = self._decode(
+            self.params, jnp.asarray(self._next_tok, jnp.int32), self.pool,
+            jnp.asarray(active), jax.random.PRNGKey(self.decode_steps))
+        logits = jax.block_until_ready(logits)
+        self.decode_s += time.monotonic() - t0
+        self.decode_steps += 1
+        self.occupancy_sum += len(active_slots) / self.n_slots
+        self.finite &= bool(jnp.all(jnp.isfinite(logits[np.asarray(active_slots)])))
+
+        # greedy argmax is batch-wide: one dispatch for the whole tick
+        # (per-slot device round-trips would serialize the hot loop)
+        greedy_toks = (np.asarray(jnp.argmax(logits, -1))
+                       if self.greedy else None)
+        token_by_slot = {}
+        for slot in active_slots:
+            tracker = self.sched.active[slot]
+            tok = (int(greedy_toks[slot]) if greedy_toks is not None
+                   else self._sample(tracker, logits[slot],
+                                     len(tracker.tokens) + 1))
+            token_by_slot[slot] = tok
+            self._next_tok[slot] = tok
+            res = self._results[tracker.req.rid]
+            if not tracker.tokens:
+                res.first_token_s = self._now()
+        for tracker in self.sched.record_tokens(token_by_slot):
+            res = self._results[tracker.req.rid]
+            res.tokens = list(tracker.tokens)
+            res.done_s = self._now()
+            res.finished_by = tracker.finished_by
+            self.tokens_emitted += len(tracker.tokens)
+            self.pool = self._release(self.pool,
+                                      jnp.asarray(tracker.slot, jnp.int32))
+        stats = kvpool.pool_wire_stats(self.pool)
+        if stats["kv_wire_bytes"] >= self.peak_kv_wire_bytes:
+            self.peak_kv_wire_bytes = stats["kv_wire_bytes"]
+            self._peak_stats = stats
+        self._wire_bytes_sum += stats["kv_wire_bytes"]
+        self._density_sum += stats["kv_density"]
+
+    def run(self) -> dict:
+        """Drain the queue; returns results + engine metrics."""
+        while self.sched.has_work():
+            self.step()
+            self.sched.check_invariants()
+        return self.summary()
+
+    # -- metrics ------------------------------------------------------------
+
+    def summary(self) -> dict:
+        results = [self._results[r] for r in sorted(self._results)]
+        # headline KV numbers are taken at peak wire occupancy — the pool
+        # drains as requests retire, so end-of-run stats under-report
+        stats = self._peak_stats or kvpool.pool_wire_stats(self.pool)
+        per_request = [
+            {
+                "rid": r.rid,
+                "tokens": list(r.tokens),
+                "n_tokens": len(r.tokens),
+                "latency_s": r.latency_s,
+                "queue_s": r.queue_s,
+                "ttft_s": r.first_token_s - r.submit_s,
+                "finished_by": r.finished_by,
+                "slo_met": r.slo_met(self._requests[r.rid]),
+            }
+            for r in results
+        ]
+        steps = max(self.decode_steps, 1)
+        mean_wire = self._wire_bytes_sum / steps
+        return {
+            "per_request": per_request,
+            # per-step KV traffic: a dense engine re-reads the full
+            # allocated pool each decode step at fp32; SPRING's interface
+            # moves the packed live bytes + mask (DESIGN.md §9.3)
+            "kv_mean_wire_bytes": mean_wire,
+            "kv_mean_density": self._density_sum / steps,
+            "kv_traffic_reduction_vs_fp32": (
+                stats["kv_dense_fp32_bytes"] / mean_wire if mean_wire else 0.0),
+            "decode_steps": self.decode_steps,
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+            "tokens_per_s": (self.tokens_emitted / self.decode_s
+                             if self.decode_s else 0.0),
+            "mean_occupancy": (self.occupancy_sum / self.decode_steps
+                               if self.decode_steps else 0.0),
+            "peak_kv_wire_bytes": self.peak_kv_wire_bytes,
+            "finite": self.finite,
+            **stats,
+        }

@@ -1,0 +1,327 @@
+"""Slot-indexed persistent KV cache, stored binary-mask compressed.
+
+The pool mirrors the ``lm_init_cache`` tree, with every seq-bearing leaf
+(full-attention k/v, MLA latent + rope key, sliding-window rings)
+replaced by a :class:`PackedKV` record — the ``kv_pack`` registry format
+applied per (layer-stack, slot) block: non-zeros collapsed to the front
+of a dense-length value buffer + 1 packed occupancy bit per element.
+O(1) state caches (ssm/conv/rglru) and the per-slot position vector pass
+through dense.  ``unpack``/``pack`` round-trip bit-exactly, so the decode
+step — which unpacks on read inside the jitted program, attends, and
+repacks — is numerically identical to decoding against the dense cache.
+
+The natural sparsity is *occupancy*: a slot that has decoded p of
+max_len positions carries density ~ p/max_len, so the pool's wire bytes
+(``20*density + 1`` bits/elem, the memstash/perfmodel formula) track the
+live KV state while a dense fp32 pool pays for the full allocation —
+that is the measured compression ``bench_serving`` reports.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import MASK_WORD_BITS
+from repro.kernels import registry
+from repro.kernels.kv_cache.ops import KV_VALUE_BITS, _n_words
+
+#: seq axis (negative, from the end) of each packable cache leaf kind;
+#: the slot axis is the one just before it.  Superset of lm.pad_cache's
+#: table: rings are fixed-size (never padded) but compress like any block.
+PACKED_SEQ_AXIS = {"k": -3, "v": -3, "ckv": -2, "krope": -2,
+                   "k_ring": -3, "v_ring": -3}
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedKV:
+    """One cache leaf in packed form; static shape/dtype ride the treedef."""
+
+    def __init__(self, values, mask, nnz, shape, dtype):
+        self.values = values  # (*lead, block_len) leaf dtype
+        self.mask = mask      # (*lead, ceil(block_len/32)) uint32
+        self.nnz = nnz        # (*lead,) int32
+        self.shape = tuple(shape)   # original dense leaf shape
+        self.dtype = jnp.dtype(dtype)
+
+    def tree_flatten(self):
+        return (self.values, self.mask, self.nnz), (self.shape, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, mask, nnz = children
+        shape, dtype = aux
+        return cls(values, mask, nnz, shape, dtype)
+
+    @property
+    def block_len(self) -> int:
+        return int(self.values.shape[-1])
+
+    @property
+    def n_blocks(self) -> int:
+        return int(math.prod(self.values.shape[:-1]))
+
+
+def _leaf_name(path) -> str:
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    return names[-1] if names else ""
+
+
+def slot_axis(path) -> int:
+    """Slot (batch) axis of a cache leaf: unit-scanned leaves stack the
+    layer group in front of it."""
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    return 1 if names and names[0].startswith("unit_") else 0
+
+
+def _vmapped(fn, x2d):
+    return jax.vmap(fn)(x2d)
+
+
+def pack_cache(cache: dict, impl: Optional[str] = None) -> dict:
+    """Dense cache tree (with (S,) ``pos``) -> pool tree with PackedKV
+    leaves.  Resolution through the kv_pack registry op happens once per
+    trace; the op's impl then runs vmapped over (stack, slot) blocks."""
+    pack_fn = registry.resolve("kv_pack", impl).fn
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        ax_neg = PACKED_SEQ_AXIS.get(name)
+        if ax_neg is None or not hasattr(leaf, "ndim"):
+            return leaf
+        ax = leaf.ndim + ax_neg  # first block dim (seq)
+        lead = leaf.shape[:ax]
+        block = int(math.prod(leaf.shape[ax:]))
+        flat = leaf.reshape(-1, block)
+        packed = _vmapped(pack_fn, flat)
+        nb = flat.shape[0]
+        return PackedKV(
+            values=packed["values"].reshape(*lead, block),
+            mask=packed["mask"].reshape(*lead, _n_words(block)),
+            nnz=packed["nnz"].reshape(lead),
+            shape=leaf.shape, dtype=leaf.dtype,
+        ) if nb else leaf
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def unpack_cache(pool: dict, impl: Optional[str] = None) -> dict:
+    """Pool tree -> dense cache tree (``pack_cache`` inverse, bit-exact)."""
+    unpack_fn = registry.resolve("kv_unpack", impl).fn
+
+    def one(leaf):
+        if not isinstance(leaf, PackedKV):
+            return leaf
+        block = leaf.block_len
+        flat_v = leaf.values.reshape(-1, block)
+        flat_m = leaf.mask.reshape(-1, _n_words(block))
+        dense = jax.vmap(lambda v, m: unpack_fn(v, m, length=block))(flat_v, flat_m)
+        return dense.reshape(leaf.shape).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(
+        one, pool, is_leaf=lambda x: isinstance(x, PackedKV))
+
+
+def init_pool(cfg, n_slots: int, max_len: int, dtype=jnp.bfloat16,
+              impl: Optional[str] = None) -> dict:
+    """Empty packed pool: ``lm_init_cache`` over the slot dimension with a
+    per-slot position vector (zeros; slots are installed mid-flight)."""
+    from repro.models.lm import lm_init_cache
+
+    cache = lm_init_cache(cfg, n_slots, max_len, dtype)
+    cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+    return pack_cache(cache, impl)
+
+
+# -- mid-flight slot surgery (all called inside jitted engine programs) ------
+
+
+def _is_packed(x) -> bool:
+    return isinstance(x, PackedKV)
+
+
+def install_packed(pool: dict, prefill_cache: dict, slot, prompt_len,
+                   impl: Optional[str] = None) -> dict:
+    """Write one prefilled request (batch-1 cache) into ``slot`` of the
+    *packed* pool directly: only the new slot's blocks are packed and
+    spliced in — the other slots' compressed state is untouched (an O(1)
+    logical change must not cost a full-pool decompress/recompress).
+    Every leaf's whole slot row is overwritten (seq tails zero-padded),
+    so a reused slot carries no stale KV from its previous tenant.
+    ``slot`` is a traced scalar."""
+    pack_fn = registry.resolve("kv_pack", impl).fn
+
+    def one(path, pool_leaf):
+        name = _leaf_name(path)
+        if name == "pos":
+            return pool_leaf.at[slot].set(jnp.asarray(prompt_len, jnp.int32))
+        p_leaf = _lookup(prefill_cache, path)
+        if not _is_packed(pool_leaf):  # O(1) state leaves stay dense
+            ax = slot_axis(path)
+            starts = [0] * pool_leaf.ndim
+            starts[ax] = slot
+            return jax.lax.dynamic_update_slice(
+                pool_leaf, p_leaf.astype(pool_leaf.dtype), tuple(starts))
+        ax_seq = len(pool_leaf.shape) + PACKED_SEQ_AXIS[name]
+        slot_ax = ax_seq - 1  # slot sits just before the seq axis
+        row = p_leaf.astype(pool_leaf.dtype)
+        extra = pool_leaf.shape[ax_seq] - row.shape[ax_seq]
+        assert extra >= 0, (
+            f"{name}: prefill length {row.shape[ax_seq]} exceeds pool "
+            f"max_len {pool_leaf.shape[ax_seq]}")
+        if extra:
+            pads = [(0, 0)] * row.ndim
+            pads[ax_seq] = (0, extra)
+            row = jnp.pad(row, pads)
+        block = pool_leaf.block_len
+        packed = _vmapped(pack_fn, row.reshape(-1, block))
+
+        def splice(store, new, ndim):
+            shape = list(store.shape)
+            shape[slot_ax] = 1
+            starts = [0] * ndim
+            starts[slot_ax] = slot
+            return jax.lax.dynamic_update_slice(
+                store, new.reshape(shape), tuple(starts))
+
+        return PackedKV(
+            values=splice(pool_leaf.values, packed["values"],
+                          pool_leaf.values.ndim),
+            mask=splice(pool_leaf.mask, packed["mask"], pool_leaf.mask.ndim),
+            nnz=splice(pool_leaf.nnz, packed["nnz"], pool_leaf.nnz.ndim),
+            shape=pool_leaf.shape, dtype=pool_leaf.dtype,
+        )
+
+    return jax.tree_util.tree_map_with_path(one, pool, is_leaf=_is_packed)
+
+
+def release_packed(pool: dict, slot) -> dict:
+    """Zero one slot's blocks in the *packed* pool (position, occupancy,
+    values) so a retired request stops counting toward density/wire
+    accounting immediately — without touching the other slots."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        if name == "pos":
+            return leaf.at[slot].set(0)
+        if not _is_packed(leaf):
+            ax = slot_axis(path)
+            idx = (slice(None),) * ax + (slot,)
+            return leaf.at[idx].set(jnp.zeros((), leaf.dtype))
+        slot_ax = len(leaf.shape) + PACKED_SEQ_AXIS[name] - 1
+        idx = (slice(None),) * slot_ax + (slot,)
+        return PackedKV(
+            values=leaf.values.at[idx].set(jnp.zeros((), leaf.values.dtype)),
+            mask=leaf.mask.at[idx].set(jnp.uint32(0)),
+            nnz=leaf.nnz.at[idx].set(jnp.int32(0)),
+            shape=leaf.shape, dtype=leaf.dtype,
+        )
+
+    return jax.tree_util.tree_map_with_path(one, pool, is_leaf=_is_packed)
+
+
+def install_prefill(dense_pool: dict, prefill_cache: dict, slot,
+                    prompt_len) -> dict:
+    """Write one prefilled request (batch-1 cache) into ``slot`` of the
+    dense pool tree: every leaf's whole slot row is overwritten (seq tails
+    zero-padded), so a reused slot carries no stale KV from its previous
+    tenant.  ``slot`` is a traced scalar."""
+
+    def one(path, pool_leaf, p_leaf=None):
+        name = _leaf_name(path)
+        if name == "pos":
+            return pool_leaf.at[slot].set(jnp.asarray(prompt_len, jnp.int32))
+        p_leaf = _lookup(prefill_cache, path)
+        ax = slot_axis(path)
+        seq_neg = PACKED_SEQ_AXIS.get(name)
+        row = p_leaf.astype(pool_leaf.dtype)
+        if seq_neg is not None:
+            sax = row.ndim + seq_neg
+            extra = pool_leaf.shape[sax] - row.shape[sax]
+            assert extra >= 0, (
+                f"{name}: prefill length {row.shape[sax]} exceeds pool "
+                f"max_len {pool_leaf.shape[sax]}")
+            if extra:
+                pads = [(0, 0)] * row.ndim
+                pads[sax] = (0, extra)
+                row = jnp.pad(row, pads)
+        starts = [0] * pool_leaf.ndim
+        starts[ax] = slot
+        return jax.lax.dynamic_update_slice(pool_leaf, row, tuple(starts))
+
+    return jax.tree_util.tree_map_with_path(one, dense_pool)
+
+
+def _lookup(tree: dict, path):
+    node: Any = tree
+    for p in path:
+        node = node[getattr(p, "key", getattr(p, "idx", None))]
+    return node
+
+
+def merge_active(new_cache: dict, old_cache: dict, active) -> dict:
+    """Keep the decode step's updates only for active slots (idle slots
+    must not advance position or accrete garbage KV)."""
+
+    def one(path, new_leaf, old_leaf):
+        ax = 0 if _leaf_name(path) == "pos" else slot_axis(path)
+        shape = [1] * new_leaf.ndim
+        shape[ax] = active.shape[0]
+        return jnp.where(active.reshape(shape), new_leaf, old_leaf)
+
+    return jax.tree_util.tree_map_with_path(one, new_cache, old_cache)
+
+
+def release_slot(dense_pool: dict, slot) -> dict:
+    """Zero one slot's rows (and its position) so a retired request stops
+    counting toward density/wire accounting immediately."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        if name == "pos":
+            return leaf.at[slot].set(0)
+        ax = slot_axis(path)
+        idx = (slice(None),) * ax + (slot,)
+        return leaf.at[idx].set(jnp.zeros((), leaf.dtype))
+
+    return jax.tree_util.tree_map_with_path(one, dense_pool)
+
+
+# -- wire accounting ----------------------------------------------------------
+
+
+def pool_wire_stats(pool: dict, value_bits: int = KV_VALUE_BITS) -> dict:
+    """Measured SPRING-interface traffic of the packed pool vs its dense
+    footprints.  Same accounting as ``memstash.format``: live values at
+    the 20-bit storage width + the mask words actually stored; the fp32
+    baseline is the full dense allocation a GPU serving engine keeps
+    resident (and what ``bench_serving`` reports the ratio against)."""
+    mask_bits = 0.0
+    elems = 0
+    logical_bytes = 0.0
+    nnz_acc = jnp.zeros((), jnp.float32)  # one device sync for the pool
+    for leaf in jax.tree_util.tree_leaves(
+            pool, is_leaf=lambda x: isinstance(x, PackedKV)):
+        if not isinstance(leaf, PackedKV):
+            continue
+        n = leaf.n_blocks * leaf.block_len
+        nnz_acc = nnz_acc + jnp.sum(leaf.nnz).astype(jnp.float32)
+        mask_bits += leaf.n_blocks * _n_words(leaf.block_len) * MASK_WORD_BITS
+        elems += n
+        logical_bytes += n * leaf.dtype.itemsize
+    nnz_total = float(nnz_acc)
+    wire_bits = nnz_total * value_bits + mask_bits
+    dense_fp32 = elems * 4.0
+    wire_bytes = wire_bits / 8.0
+    return {
+        "kv_elems": float(elems),
+        "kv_nnz": nnz_total,
+        "kv_density": nnz_total / elems if elems else 0.0,
+        "kv_wire_bytes": wire_bytes,
+        "kv_logical_bytes": logical_bytes,
+        "kv_dense_fp32_bytes": dense_fp32,
+        "kv_compression_vs_fp32": dense_fp32 / wire_bytes if wire_bytes else 0.0,
+    }

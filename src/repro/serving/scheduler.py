@@ -1,0 +1,120 @@
+"""FCFS slot admission + request lifecycle.
+
+Model-agnostic on purpose: the scheduler never touches jax, so the
+hypothesis property suite (tests/test_serving_scheduler.py) can drive
+thousands of arrival/length streams against the invariants —
+
+  * no slot leaks: every admitted request returns its slot on retirement,
+    and ``len(active) + len(free) == n_slots`` at every tick;
+  * no starvation: admission order is exactly submission order (FCFS);
+  * exact completion: a request retires with ``min(steps-to-eos,
+    max_tokens)`` tokens, never more, never fewer;
+
+— while the engine drives the same object with real jitted steps.
+"""
+
+from __future__ import annotations
+
+import bisect
+import collections
+from typing import Optional
+
+from repro.serving.request import Request
+
+
+class RequestTracker:
+    """One in-flight request: its slot, emitted tokens, finish rule."""
+
+    def __init__(self, req: Request, slot: int):
+        self.req = req
+        self.slot = slot
+        self.tokens: list = []
+        self.finished_by: Optional[str] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.finished_by is not None
+
+    def append(self, tok: int) -> bool:
+        """Record one emitted token; returns True when the request is done
+        (EOS emitted — included in the output — or max_tokens reached)."""
+        assert not self.finished, f"request {self.req.rid} already finished"
+        self.tokens.append(tok)
+        if self.req.eos_id is not None and tok == self.req.eos_id:
+            self.finished_by = "eos"
+        elif len(self.tokens) >= self.req.max_tokens:
+            self.finished_by = "max_tokens"
+        return self.finished
+
+
+class SlotScheduler:
+    """Fixed slot pool + FCFS queue; requests join mid-flight and retire
+    independently, freed slots refill from the queue on the next tick."""
+
+    def __init__(self, n_slots: int):
+        if n_slots <= 0:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = n_slots
+        self._free: list[int] = list(range(n_slots))  # kept sorted
+        self._queue: collections.deque[Request] = collections.deque()
+        self.active: dict[int, RequestTracker] = {}
+        #: rids in admission order (the FCFS seal)
+        self.admission_log: list[int] = []
+        self._submit_log: list[int] = []
+
+    # -- state views --------------------------------------------------------
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def occupancy(self) -> float:
+        return len(self.active) / self.n_slots
+
+    def has_work(self) -> bool:
+        return bool(self._queue or self.active)
+
+    def check_invariants(self) -> None:
+        assert len(self.active) + len(self._free) == self.n_slots, (
+            f"slot leak: {len(self.active)} active + {len(self._free)} free "
+            f"!= {self.n_slots}")
+        assert set(self._free).isdisjoint(self.active), "slot double-booked"
+        assert self.admission_log == self._submit_log[: len(self.admission_log)], (
+            "FCFS violated: admissions diverged from submission order")
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+        self._submit_log.append(req.rid)
+
+    def admit(self) -> list[RequestTracker]:
+        """Pop FCFS into free slots (lowest slot first, deterministic)."""
+        out = []
+        while self._free and self._queue:
+            slot = self._free.pop(0)
+            req = self._queue.popleft()
+            tracker = RequestTracker(req, slot)
+            self.active[slot] = tracker
+            self.admission_log.append(req.rid)
+            out.append(tracker)
+        return out
+
+    def retire(self, slot: int) -> RequestTracker:
+        tracker = self.active.pop(slot)
+        bisect.insort(self._free, slot)
+        return tracker
+
+    def record_tokens(self, token_by_slot: dict) -> list[RequestTracker]:
+        """Append one decode tick's token per active slot; retire and
+        return the trackers that finished on this tick."""
+        done = []
+        for slot in sorted(self.active):
+            if self.active[slot].append(int(token_by_slot[slot])):
+                done.append(self.retire(slot))
+        return done

@@ -1,0 +1,81 @@
+"""Serving step builders: the jitted prefill / decode programs.
+
+Moved out of ``runtime/train.py`` when the continuous-batching engine
+landed (runtime.train re-exports them for the dry-run and older callers).
+Both builders take any *arch view* exposing ``is_encdec`` +
+``config``/``reduced()`` — ``configs.base.ResolvedArch`` is the canonical
+one (it replaced the per-launcher ``class _A`` shims).
+
+Decode steps accept a scalar ``cache["pos"]`` (static batch: every row at
+one depth) or a per-slot (B,) vector (the engine's slot pool); see
+``models/lm.lm_decode_step``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.spring_ops import KeyGen
+from repro.models import encdec as ed_mod
+from repro.models import lm as lm_mod
+from repro.models.layers import SpringContext
+from repro.runtime.sharding import DEFAULT_RULES, sharding_context
+
+
+def _rules_for(step_cfg):
+    if not step_cfg.rules_override:
+        return None
+    rules = dict(DEFAULT_RULES)
+    rules.update(dict(step_cfg.rules_override))
+    return rules
+
+
+def _ctx_for(step_cfg, key) -> SpringContext:
+    keys = KeyGen(key) if step_cfg.spring.is_quantized else None
+    return SpringContext(cfg=step_cfg.spring, keys=keys,
+                         prune_ratio=step_cfg.prune_ratio,
+                         int8_cache=step_cfg.int8_cache)
+
+
+def make_prefill_step(arch, step_cfg, mesh=None, reduced: bool = False):
+    cfg = arch.reduced() if reduced else arch.config
+
+    if arch.is_encdec:
+        def prefill(params, batch, key):
+            with sharding_context(mesh, _rules_for(step_cfg)):
+                ctx = _ctx_for(step_cfg, key)
+                cache = ed_mod.encdec_init_cache(
+                    params, cfg, batch["frames"], ctx, max_len=batch["tokens"].shape[1]
+                )
+                # teacher-forced pass to fill self-KV is decode-looped in
+                # serving; dry-run measures encoder + cross-KV build + one
+                # full decoder pass (the dominant prefill compute)
+                enc = ed_mod.encode(params, cfg, batch["frames"], ctx)
+                h = ed_mod.decode_hidden(params, cfg, batch["tokens"], enc, ctx)
+                logits = h[:, -1] @ params["embed"]["embedding"].T
+                return logits, cache
+        return prefill
+
+    def prefill(params, batch, key):
+        with sharding_context(mesh, _rules_for(step_cfg)):
+            return lm_mod.lm_prefill(params, cfg, batch["tokens"],
+                                     _ctx_for(step_cfg, key),
+                                     batch.get("img_embeds"))
+    return prefill
+
+
+def make_decode_step(arch, step_cfg, mesh=None, reduced: bool = False):
+    cfg = arch.reduced() if reduced else arch.config
+
+    if arch.is_encdec:
+        def decode(params, tokens, cache, key):
+            with sharding_context(mesh, _rules_for(step_cfg)):
+                return ed_mod.encdec_decode_step(params, cfg, tokens, cache,
+                                                 _ctx_for(step_cfg, key))
+        return decode
+
+    def decode(params, tokens, cache, key):
+        with sharding_context(mesh, _rules_for(step_cfg)):
+            return lm_mod.lm_decode_step(params, cfg, tokens, cache,
+                                         _ctx_for(step_cfg, key))
+    return decode

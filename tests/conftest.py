@@ -39,3 +39,8 @@ def pytest_configure(config):
         "cross-checks vs the dense ref gradient "
         "(CI grad-parity job runs `pytest -m grad_parity`)",
     )
+    config.addinivalue_line(
+        "markers",
+        "serving: continuous-batching engine parity/property/KV-roundtrip "
+        "suite (CI serving job runs `pytest -m serving`)",
+    )

@@ -31,3 +31,18 @@ def test_train_lm_main_runs(tmp_path, capsys):
     res = mod.main(steps=1, argv=["--ckpt-dir", str(tmp_path / "ck")])
     assert res["last_loss"] is not None
     assert "final:" in capsys.readouterr().out
+
+
+def test_serve_batched_main_plumbs_engine_flags(capsys):
+    """ISSUE 4 satellite: --kernel-impl / --greedy / --seed (and the
+    engine's --slots/--queue) reach serve_session from the example CLI."""
+    mod = _load("serve_batched")
+    out = mod.main(argv=[
+        "--batch", "2", "--prompt-len", "6", "--gen", "3", "--slots", "2",
+        "--queue", "3", "--mode", "quant_sparse", "--kernel-impl", "ref",
+        "--greedy", "--seed", "3",
+    ])
+    assert out["engine"] and out["finite"]
+    assert len(out["per_request"]) == 3
+    text = capsys.readouterr().out
+    assert "tok/s" in text and "kv:" in text
