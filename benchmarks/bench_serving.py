@@ -37,11 +37,32 @@ ARCH = "llama3.2-1b"
 ENGINE_CASE = dict(batch=3, slots=2, queue=6, prompt_len=10, gen=8,
                    mode="quant_sparse")
 
+#: Canonical RunSpec surface for benchmarks/run.py --json: the engine
+#: bench below runs from exactly this spec, so its rows' spec_hash is the
+#: configuration that produced them.
+SPEC_RUN = "serve"
+SPEC_OVERRIDES = {
+    "arch.id": ARCH,
+    "shape.batch": ENGINE_CASE["batch"],
+    "shape.prompt_len": ENGINE_CASE["prompt_len"],
+    "shape.gen": ENGINE_CASE["gen"],
+    "serving.slots": ENGINE_CASE["slots"],
+    "serving.queue": ENGINE_CASE["queue"],
+    "numerics.mode": ENGINE_CASE["mode"],
+}
+
 
 def _engine_rows() -> tuple[list[tuple], dict]:
-    from repro.launch.serve import serve_session
+    from repro.api.sessions import ServeSession
+    from repro.api.spec import build_spec
 
-    out = serve_session(ARCH, reduced=True, **ENGINE_CASE)
+    # use_env=False: the bench measures its declared configuration (the
+    # ambient SPRING_KERNEL_IMPL still steers dispatch through the
+    # registry and is recorded per row as ``impl``)
+    spec = build_spec(SPEC_RUN, overrides=[
+        (path, value, "bench:bench_serving")
+        for path, value in SPEC_OVERRIDES.items()], use_env=False)
+    out = ServeSession(spec).run()
     impl = registry.resolve("kv_pack", _count=False).name
     step_us = out["decode_s"] / max(out["decode_steps"], 1) * 1e6
     rows = [

@@ -14,6 +14,11 @@ from repro.launch.train import train_loop
 
 STEPS = 120
 
+# No SPEC_RUN/SPEC_OVERRIDES here: the two arms run *different* numerics
+# (dense vs quant+SR), so one suite-level spec_hash would misattribute
+# whichever arm it doesn't describe.  benchmarks/run.py only stamps rows
+# of suites that declare a spec they actually run (bench_serving does).
+
 
 def rows() -> list[tuple[str, float, float]]:
     out = []

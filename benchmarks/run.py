@@ -16,6 +16,12 @@ resolved kernel-impl name.  The CSV keeps the stable 3-column schema; the
 ``--json`` payload carries the impl per row plus the registry's full
 resolution table, so BENCH_*.json trajectories are attributable to a
 backend (and to the SPRING_KERNEL_IMPL / --kernel-impl policy in force).
+
+Each suite also resolves a canonical RunSpec (its ``SPEC_RUN`` /
+``SPEC_OVERRIDES`` attributes layered over the spec defaults + SPRING_*
+env), embedded per suite in the ``--json`` payload with its hash; every
+row carries its suite's ``spec_hash`` so BENCH trajectories are tied to
+the exact configuration that produced them.
 """
 
 from __future__ import annotations
@@ -53,18 +59,46 @@ def main() -> None:
     import jax
 
     from benchmarks.bench_serving import ARCH as ARCH_SERVE
+    from repro.api.spec import SpecError, build_spec
     from repro.kernels import registry
+
+    def suite_spec(suite):
+        """Canonical RunSpec for a suite that declares one (SPEC_RUN +
+        SPEC_OVERRIDES module attributes over the spec defaults), or None
+        for suites whose benches are not spec-shaped (micro-kernel sweeps)
+        — those rows carry no spec_hash rather than a fabricated one.  No
+        env layer: a declaring suite runs its declared configuration
+        regardless of SPRING_* (the ambient kernel policy is recorded
+        separately as ``kernel_policy``)."""
+        if not hasattr(suite, "SPEC_RUN"):
+            return None
+        name = suite.__name__.rsplit(".", 1)[-1]
+        overrides = [(path, value, f"bench:{name}") for path, value in
+                     getattr(suite, "SPEC_OVERRIDES", {}).items()]
+        return build_spec(suite.SPEC_RUN, overrides=overrides, use_env=False)
 
     print("name,us_per_call,derived")
     failures = 0
     records = []
+    suite_specs = {}
     for suite in suites:
+        name = suite.__name__.rsplit(".", 1)[-1]
+        spec = None
+        try:
+            spec = suite_spec(suite)
+            if spec is not None:
+                suite_specs[name] = spec
+        except SpecError:  # a broken SPEC_OVERRIDES must not kill the rows
+            failures += 1
+            traceback.print_exc(file=sys.stderr)
         try:
             for row in suite.rows():
-                name, us, derived = row[0], row[1], row[2]
+                row_name, us, derived = row[0], row[1], row[2]
                 impl = row[3] if len(row) > 3 else None
-                print(f"{name},{us:.2f},{derived:.6g}")
-                rec = {"name": name, "us_per_call": us, "derived": derived}
+                print(f"{row_name},{us:.2f},{derived:.6g}")
+                rec = {"name": row_name, "us_per_call": us, "derived": derived}
+                if spec is not None:
+                    rec["spec_hash"] = spec.spec_hash()
                 if impl is not None:
                     rec["impl"] = impl
                 records.append(rec)
@@ -97,6 +131,13 @@ def main() -> None:
             "kernel_impls": registry.resolution_table(),
             "backward_tile_skip": backward_skip,
             "serving": serving,
+            # per-suite canonical RunSpec + hash: ties every BENCH row
+            # (via its spec_hash) to the exact configuration it measured
+            "suites": {
+                name: {"spec": spec.to_dict(),
+                       "spec_hash": spec.spec_hash()}
+                for name, spec in suite_specs.items()
+            },
             "rows": records,
             "failures": failures,
         }

@@ -62,11 +62,21 @@ def main(steps: int = 25) -> None:
           f"{probe['backward_tile_skip_dw']:.2f} "
           f"(sparsity pays in both directions)")
 
-    # --- a taste of the training stack --------------------------------------
-    from repro.launch.train import train_loop
+    # --- a taste of the training stack: one declarative RunSpec -------------
+    # The whole run — arch, shape, numerics, sparsity, kernels, seeds — is
+    # one frozen spec; its canonical JSON (embedded in every run artifact)
+    # reproduces the run bit-for-bit.  See DESIGN.md §10.
+    from repro.api import TrainSession, build_spec
 
-    res = train_loop("llama3.2-1b", reduced=True, steps=steps, batch=8, seq=64,
-                     mode="quant", fixed_point_weights=True, log_every=100)
+    spec = build_spec("train", sets=[
+        "arch.id=llama3.2-1b", f"train.steps={steps}", "shape.batch=8",
+        "shape.seq=64", "numerics.mode=quant",
+        "numerics.fixed_point_weights=true", "train.log_every=100",
+    ])
+    print(f"[spec] canonical hash {spec.spec_hash()} "
+          f"(numerics.mode={spec.numerics.mode!r} from "
+          f"{spec.provenance['numerics.mode']})")
+    res = TrainSession(spec).run()
     print(f"[train] Q4.16+SR end-to-end: loss {res['first_loss']:.3f} -> "
           f"{res['last_loss']:.3f}")
 

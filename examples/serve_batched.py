@@ -2,6 +2,11 @@
 fixed slot pool, decode with the sparsity-compressed KV cache, report
 latency/throughput/compression.
 
+The example is a thin adapter over the RunSpec API — the whole run is
+one declarative spec:
+
+  PYTHONPATH=src python examples/serve_batched.py \
+      --spec examples/specs/serve_quant_sparse.json
   PYTHONPATH=src python examples/serve_batched.py --arch llama3.2-1b \
       --batch 4 --slots 2 --queue 6 --gen 24 --mode quant_sparse \
       --kernel-impl ref --seed 7
@@ -9,35 +14,49 @@ latency/throughput/compression.
 
 import argparse
 
-from repro.launch.serve import serve_session
+from repro.api.cli import flag, legacy_overrides
+from repro.api.sessions import ServeSession
+from repro.api.spec import build_spec
+
+# The short flags are this example's convenience surface; each one is an
+# alias for the --set spelling of the same RunSpec field (no deprecation
+# here — the example documents both).
+FLAGS = (
+    flag("--arch", "arch.id"),
+    flag("--batch", "shape.batch", type=int),
+    flag("--prompt-len", "shape.prompt_len", type=int),
+    flag("--gen", "shape.gen", type=int),
+    flag("--mode", "numerics.mode",
+         choices=["dense", "quant", "quant_sparse"]),
+    flag("--kernel-impl", "kernels.policy"),
+    flag("--slots", "serving.slots", type=int),
+    flag("--queue", "serving.queue", type=int),
+    flag("--greedy", "serving.greedy", const=True, dest="legacy_greedy"),
+    flag("--sample", "serving.greedy", const=False, dest="legacy_greedy"),
+    flag("--seed", "seeds.seed", type=int),
+)
 
 
 def main(argv: list | None = None):
     """CLI entry point; ``main(argv=[...])`` is the smoke-test path."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--mode", default="dense", choices=["dense", "quant", "quant_sparse"])
-    ap.add_argument("--kernel-impl", default=None,
-                    help="kernel-dispatch policy, e.g. 'ref' (default: auto)")
-    ap.add_argument("--slots", type=int, default=None,
-                    help="engine slot-pool size (default: --batch)")
-    ap.add_argument("--queue", type=int, default=None,
-                    help="total requests (default: --batch); surplus joins mid-flight")
-    ap.add_argument("--greedy", dest="greedy", action="store_true", default=True)
-    ap.add_argument("--sample", dest="greedy", action="store_false",
-                    help="sample with per-request PRNG keys")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spec", default=None, metavar="PATH",
+                    help="RunSpec file (JSON or TOML)")
+    ap.add_argument("--set", dest="sets", action="append", default=[],
+                    metavar="KEY=VALUE", help="dotted RunSpec override")
+    for f in FLAGS:
+        f.add_to(ap)
     args = ap.parse_args(argv)
 
-    out = serve_session(args.arch, reduced=True, batch=args.batch,
-                        prompt_len=args.prompt_len, gen=args.gen,
-                        mode=args.mode, kernel_impl=args.kernel_impl,
-                        greedy=args.greedy, seed=args.seed,
-                        slots=args.slots, queue=args.queue)
-    print(f"arch={args.arch} mode={args.mode} slots={out.get('slots', args.batch)}")
+    # base layer = this example's historical defaults (batch 4)
+    spec = build_spec("serve", data={"shape": {"batch": 4}},
+                      data_label="example-default",
+                      spec_file=args.spec, sets=args.sets,
+                      overrides=legacy_overrides(args, FLAGS, warn=False))
+    out = ServeSession(spec).run()
+    print(f"arch={spec.arch.id} mode={spec.numerics.mode} "
+          f"slots={out.get('slots', spec.shape.batch)} "
+          f"spec={out['spec_hash']}")
     print(f"  prefill: {out['prefill_s']*1e3:8.1f} ms")
     print(f"  decode:  {out['decode_s']*1e3:8.1f} ms  ({out['tokens_per_s']:.1f} tok/s)")
     if out.get("engine"):

@@ -1,5 +1,5 @@
 """End-to-end training driver: data pipeline -> SPRING train step ->
-checkpoint/resume -> straggler watchdog.
+checkpoint/resume -> straggler watchdog — a thin adapter over RunSpec.
 
 Presets:
   cpu-small (default) — a reduced llama-family model, a few hundred steps
@@ -9,15 +9,29 @@ Presets:
 
   PYTHONPATH=src python examples/train_lm.py --steps 300
   PYTHONPATH=src python examples/train_lm.py --preset pod-100m --steps 300
+  PYTHONPATH=src python examples/train_lm.py \
+      --spec examples/specs/train_quant_sparse.json
 """
 
 import argparse
 import dataclasses
 import logging
 
+from repro.api.cli import flag, legacy_overrides
+from repro.api.sessions import TrainSession
+from repro.api.spec import build_spec
 from repro.configs import get_arch
 from repro.models.attention import AttnSpec
 from repro.models.lm import LMConfig
+
+FLAGS = (
+    flag("--steps", "train.steps", type=int),
+    flag("--mode", "numerics.mode",
+         choices=["dense", "quant", "quant_sparse"]),
+    flag("--backward-sparsity", "sparsity.backward",
+         choices=["none", "auto", "ref", "jnp", "interpret", "pallas"]),
+    flag("--ckpt-dir", "train.ckpt_dir"),
+)
 
 
 def config_100m() -> LMConfig:
@@ -35,20 +49,17 @@ def main(steps: int | None = None, argv: list[str] | None = None):
     one step with default flags (the smoke-test path)."""
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
     ap = argparse.ArgumentParser()
-    ap.add_argument("--preset", default="cpu-small", choices=["cpu-small", "pod-100m"])
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--mode", default="dense", choices=["dense", "quant", "quant_sparse"])
-    ap.add_argument("--backward-sparsity", default="auto",
-                    choices=["none", "auto", "ref", "jnp", "interpret", "pallas"],
-                    help="sparsity-aware backward pass (quant_sparse mode)")
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--spec", default=None, metavar="PATH",
+                    help="RunSpec file (JSON or TOML)")
+    ap.add_argument("--set", dest="sets", action="append", default=[],
+                    metavar="KEY=VALUE", help="dotted RunSpec override")
+    ap.add_argument("--preset", default="cpu-small",
+                    choices=["cpu-small", "pod-100m"])
+    for f in FLAGS:
+        f.add_to(ap)
     if steps is not None and argv is None:
         argv = []  # programmatic call: don't read the host process argv
     args = ap.parse_args(argv)
-    if steps is not None:
-        args.steps = steps
-
-    from repro.launch import train as train_mod
 
     if args.preset == "pod-100m":
         # register the 100M config under the llama arch machinery
@@ -58,19 +69,32 @@ def main(steps: int | None = None, argv: list[str] | None = None):
         import repro.configs.registry as reg
 
         reg.ARCHS["llama-100m"] = arch
-        arch_id, batch, seq = "llama-100m", 32, 512
+        base = {"arch": {"id": "llama-100m"},
+                "shape": {"batch": 32, "seq": 512}}
     else:
-        arch_id, batch, seq = "llama3.2-1b", 8, 128
+        base = {"arch": {"id": "llama3.2-1b"},
+                "shape": {"batch": 8, "seq": 128}}
+    base["train"] = {"steps": 300, "ckpt_dir": "/tmp/repro_train_lm",
+                     "ckpt_every": 100, "log_every": 20}
 
-    res = train_mod.train_loop(
-        arch_id, reduced=True, steps=args.steps, batch=batch, seq=seq,
-        mode=args.mode, fixed_point_weights=(args.mode != "dense"),
-        backward_sparsity=args.backward_sparsity,
-        ckpt_dir=args.ckpt_dir, ckpt_every=100, log_every=20,
-    )
+    over = legacy_overrides(args, FLAGS, warn=False)
+    if steps is not None:
+        over.append(("train.steps", steps, "call:steps"))
+    spec = build_spec("train", data=base, data_label=f"preset:{args.preset}",
+                      spec_file=args.spec, overrides=over, sets=args.sets)
+    # SR fixed-point master weights whenever the mode is quantized (the
+    # pre-RunSpec behavior of this example), unless the spec said otherwise
+    if (spec.numerics.mode != "dense"
+            and spec.provenance.get("numerics.fixed_point_weights") == "default"):
+        spec = dataclasses.replace(
+            spec, numerics=dataclasses.replace(
+                spec.numerics, fixed_point_weights=True),
+            provenance={**spec.provenance,
+                        "numerics.fixed_point_weights": f"preset:{args.preset}"})
+    res = TrainSession(spec).run()
     print(f"final: loss {res['first_loss']:.4f} -> {res['last_loss']:.4f} "
-          f"over {args.steps} steps; {res['slow_steps']} slow steps; "
-          f"checkpoints in {args.ckpt_dir}")
+          f"over {spec.train.steps} steps; {res['slow_steps']} slow steps; "
+          f"checkpoints in {spec.train.ckpt_dir} [spec {res['spec_hash']}]")
     return res
 
 

@@ -1,0 +1,37 @@
+"""repro.api — the declarative RunSpec configuration API.
+
+One frozen, serializable :class:`RunSpec` describes any run (train /
+serve / dryrun); :class:`TrainSession` / :class:`ServeSession` /
+:class:`DryrunSession` execute it; ``build_spec`` implements the layered
+resolution (defaults -> ArchDef -> spec file -> SPRING_* env -> CLI)
+with per-field provenance.  See DESIGN.md §10.
+"""
+
+from repro.api.spec import (
+    ENV_FIELDS,
+    MESH_KINDS,
+    RUN_MODES,
+    ResolvedRun,
+    RunSpec,
+    SpecError,
+    build_spec,
+    field_paths,
+    load_spec_data,
+)
+from repro.api.sessions import (
+    DryrunSession,
+    ServeSession,
+    Session,
+    TrainSession,
+    dryrun_spec,
+    serve_spec,
+    session_for,
+    train_spec,
+)
+
+__all__ = [
+    "ENV_FIELDS", "MESH_KINDS", "RUN_MODES", "ResolvedRun", "RunSpec",
+    "SpecError", "build_spec", "field_paths", "load_spec_data",
+    "DryrunSession", "ServeSession", "Session", "TrainSession",
+    "dryrun_spec", "serve_spec", "session_for", "train_spec",
+]

@@ -1,0 +1,119 @@
+"""Spec validation CLI — the CI ``spec`` job's workhorse.
+
+  # validate + resolve checked-in spec files
+  PYTHONPATH=src python -m repro.api.validate examples/specs/*.json
+
+  # round-trip seal: every registered arch x {train, serve, dryrun}
+  PYTHONPATH=src python -m repro.api.validate --roundtrip-all
+
+  # dryrun-from-spec: build the debug mesh and *lower* the decode cell of
+  # every registered arch from a pure spec (compile is the per-arch deep
+  # smoke in tests; lowering proves spec -> program for the whole registry)
+  PYTHONPATH=src python -m repro.api.validate --lower-all
+
+Exit code 0 only if everything passes.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=8"
+)
+
+import argparse  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+from repro.api.sessions import DryrunSession, build_mesh  # noqa: E402
+from repro.api.spec import RunSpec, SpecError, build_spec  # noqa: E402
+
+
+def validate_files(paths) -> int:
+    failures = 0
+    for path in paths:
+        try:
+            spec = RunSpec.from_file(path)
+            resolved = spec.resolve()
+            roundtrip = RunSpec.from_json(spec.to_json())
+            assert roundtrip == spec, "round trip changed the spec"
+            assert roundtrip.spec_hash() == spec.spec_hash()
+            print(f"ok {path}: run={spec.run} arch={spec.arch.id} "
+                  f"hash={spec.spec_hash()} "
+                  f"(memstash->{resolved.memstash_policy})")
+        except (SpecError, OSError, AssertionError) as e:
+            failures += 1
+            print(f"FAIL {path}: {e}", file=sys.stderr)
+    return failures
+
+
+def roundtrip_all() -> int:
+    from repro.configs import ARCHS
+
+    failures = 0
+    for arch_id in sorted(ARCHS):
+        for run in ("train", "serve", "dryrun"):
+            try:
+                spec = build_spec(run, use_env=False, overrides=[
+                    ("arch.id", arch_id, "sweep")])
+                again = RunSpec.from_json(spec.to_json())
+                assert again == spec
+                r1, r2 = spec.resolve(), again.resolve()
+                assert (r1.step, r1.spring, r1.config, r1.memstash) == \
+                       (r2.step, r2.spring, r2.config, r2.memstash), \
+                    "resolve() diverged after round trip"
+                print(f"ok {arch_id} x {run}: {spec.spec_hash()}")
+            except (SpecError, AssertionError) as e:
+                failures += 1
+                print(f"FAIL {arch_id} x {run}: {e}", file=sys.stderr)
+    return failures
+
+
+def lower_all() -> int:
+    from repro.configs import ARCHS
+
+    mesh = build_mesh("debug")
+    failures = 0
+    for arch_id in sorted(ARCHS):
+        spec = build_spec("dryrun", use_env=False, overrides=[
+            ("arch.id", arch_id, "sweep"),
+            ("arch.reduced", False, "sweep"),
+            ("shape.cell", "decode_32k", "sweep"),
+            ("shape.mesh", "debug", "sweep"),
+            ("dryrun.cost_unrolled", False, "sweep"),
+        ])
+        t0 = time.time()
+        try:
+            lowered = DryrunSession(spec).lower(mesh=mesh)
+            status = "skipped" if lowered is None else "lowered"
+            print(f"ok {arch_id}: {status} decode_32k from spec "
+                  f"{spec.spec_hash()} in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001 — report every arch
+            failures += 1
+            print(f"FAIL {arch_id}: {type(e).__name__}: {e}", file=sys.stderr)
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("specs", nargs="*", help="spec files to validate")
+    ap.add_argument("--roundtrip-all", action="store_true",
+                    help="round-trip + resolve every arch x run mode")
+    ap.add_argument("--lower-all", action="store_true",
+                    help="lower the decode cell of every arch from a spec")
+    args = ap.parse_args(argv)
+    failures = 0
+    if args.specs:
+        failures += validate_files(args.specs)
+    if args.roundtrip_all:
+        failures += roundtrip_all()
+    if args.lower_all:
+        failures += lower_all()
+    if not (args.specs or args.roundtrip_all or args.lower_all):
+        ap.error("nothing to do: pass spec files, --roundtrip-all, "
+                 "or --lower-all")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -95,6 +95,11 @@ DENSE = SpringConfig(mode="dense")
 QUANT = SpringConfig(mode="quant")
 QUANT_SPARSE = SpringConfig(mode="quant_sparse")
 
+#: Canonical name -> base config for the three modes.  The single copy —
+#: the launchers and the RunSpec resolver all import this one (the
+#: per-launcher ``MODES = {...}`` dicts predate the RunSpec API).
+MODES = {"dense": DENSE, "quant": QUANT, "quant_sparse": QUANT_SPARSE}
+
 
 class KeyGen:
     """Deterministic per-trace key stream for SR sites.

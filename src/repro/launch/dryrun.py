@@ -1,16 +1,22 @@
-"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+"""Multi-pod dry-run launcher: a thin adapter over the RunSpec API.
 
 THE FIRST TWO LINES must run before any other import (jax locks the
 device count on first init): they give this process 512 placeholder host
 devices so ``jax.make_mesh`` can build the production meshes.
 
 Per cell this emits: memory_analysis (fits-on-chip proof), cost_analysis
-(FLOPs/bytes for §Roofline), and the parsed collective-bytes table, as
-JSON consumed by EXPERIMENTS.md.
+(FLOPs/bytes for §Roofline), the parsed collective-bytes table, and the
+canonical resolved RunSpec (+hash/provenance), as JSON consumed by
+EXPERIMENTS.md and ``roofline_report``.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
-      --shape train_4k --mesh multi --mode dense --out results/q.json
+  PYTHONPATH=src python -m repro.launch.dryrun --spec examples/specs/dryrun_decode_debug.json
+  PYTHONPATH=src python -m repro.launch.dryrun --set arch.id=qwen2-7b \
+      --set shape.cell=train_4k --set shape.mesh=multi --out results/q.json
+
+Legacy flag spellings (``--arch``, ``--shape``, ``--kernel-impl``, ...)
+shim to the same RunSpec fields with a DeprecationWarning; ``run_cell``
+keeps its keyword signature for programmatic callers.
 """
 
 import os
@@ -20,169 +26,48 @@ os.environ["XLA_FLAGS"] = (
     or "--xla_force_host_platform_device_count=512"
 )
 
-import argparse  # noqa: E402
+import argparse  # noqa: E402,F401  (re-export site for older callers)
 import json  # noqa: E402
 import sys  # noqa: E402
-import time  # noqa: E402
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-
-from repro.configs import SHAPES, get_arch  # noqa: E402
-from repro.core.spring_ops import DENSE, QUANT, QUANT_SPARSE  # noqa: E402
-from repro.kernels import registry as kernel_registry  # noqa: E402
-from repro.launch.hlo_analysis import (  # noqa: E402
-    collective_bytes,
-    fusion_adjusted_bytes,
-    memory_summary,
-    roofline_terms,
+from repro.api.cli import _SKIP, flag, make_parser, spec_from_args  # noqa: E402
+from repro.api.sessions import (  # noqa: E402
+    DryrunSession,
+    build_mesh,
+    dryrun_spec,
+    model_flops,
+    run_lower,
 )
-from repro.launch.mesh import make_debug_mesh, make_production_mesh  # noqa: E402
-from repro.optim.optimizers import OptimizerConfig  # noqa: E402
-from repro.runtime.compat import cost_analysis_dict  # noqa: E402
-from repro.runtime.train import (  # noqa: E402
-    StepConfig,
-    init_train_state,
-    make_decode_step,
-    make_prefill_step,
-    make_train_step,
+from repro.api.spec import (  # noqa: E402
+    DEFAULT_TRAIN_MICROBATCH,
+    TRAIN_MICROBATCH_OVERRIDES,
 )
-from repro.runtime.tree_sharding import batch_shardings, tree_shardings  # noqa: E402
+from repro.configs import SHAPES  # noqa: E402
+from repro.core.spring_ops import MODES  # noqa: E402
 
-MODES = {"dense": DENSE, "quant": QUANT, "quant_sparse": QUANT_SPARSE}
-
-
-def _param_counts(arch) -> tuple[float, float]:
-    """(total, active) parameter counts from init shapes (no allocation)."""
-    from repro.models import encdec as ed_mod
-    from repro.models import lm as lm_mod
-
-    init = ed_mod.encdec_init if arch.is_encdec else lm_mod.lm_init
-    shapes = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), arch.config))
-    total = emb = expert = 0
-    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
-        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
-        n = 1
-        for d in leaf.shape:
-            n *= d
-        total += n
-        if names[-1] == "embedding":
-            emb += n
-        if names[-1] in ("w_gate", "w_up", "w_down"):
-            expert += n
-    # tied embeddings serve as the lm_head -> their matmul IS model compute
-    tied = bool(getattr(arch.config, "tie_embeddings", False)) or arch.is_encdec
-    active = total - (0 if tied else emb)
-    cfg = arch.config
-    moe = getattr(cfg, "moe", None)
-    if moe is not None and expert:
-        active -= expert * (1.0 - moe.top_k / moe.n_experts)
-    return float(total), float(active)
-
-
-def model_flops(arch, shape_name: str) -> float:
-    sh = SHAPES[shape_name]
-    total, active = _param_counts(arch)
-    d_tokens = sh.global_batch * sh.seq_len
-    if arch.is_encdec and sh.kind != "decode":
-        d_tokens = sh.global_batch * (sh.seq_len + arch.config.enc_seq)
-    if sh.kind == "train":
-        return 6.0 * active * d_tokens
-    if sh.kind == "prefill":
-        return 2.0 * active * d_tokens
-    return 2.0 * active * sh.global_batch  # decode: per emitted token
-
-
-def build_mesh(kind: str):
-    if kind == "single":
-        return make_production_mesh(multi_pod=False)
-    if kind == "multi":
-        return make_production_mesh(multi_pod=True)
-    if kind == "debug":
-        return make_debug_mesh()
-    if kind == "debug_multi":
-        return make_debug_mesh(multi_pod=True)
-    raise ValueError(kind)
-
-
-def run_lower(arch, shape_name, mesh, step_cfg, serve_dtype):
-    """Lower one cell (train | prefill | decode) with explicit shardings."""
-    sh = SHAPES[shape_name]
-    mode_quant = step_cfg.spring.is_quantized
-    if sh.kind == "train":
-        state_shapes = jax.eval_shape(
-            lambda: init_train_state(jax.random.PRNGKey(0), arch, step_cfg)
-        )
-        batch_shapes = {
-            k: v for k, v in arch.input_specs(shape_name, arch.config).items()
-        }
-        step = make_train_step(arch, step_cfg, mesh=mesh)
-        state_sh = tree_shardings(state_shapes, mesh)
-        batch_sh = batch_shardings(batch_shapes, mesh)
-        return jax.jit(
-            step,
-            in_shardings=(state_sh, batch_sh),
-            out_shardings=(state_sh, None),
-            donate_argnums=(0,),
-        ).lower(state_shapes, batch_shapes)
-
-    from repro.models import encdec as ed_mod
-    from repro.models import lm as lm_mod
-
-    init = ed_mod.encdec_init if arch.is_encdec else lm_mod.lm_init
-    param_shapes = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), arch.config))
-    param_shapes = jax.tree_util.tree_map(
-        lambda s: jax.ShapeDtypeStruct(s.shape, serve_dtype)
-        if s.dtype == jnp.float32 else s, param_shapes)
-    param_sh = tree_shardings(param_shapes, mesh)
-    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
-    if sh.kind == "prefill":
-        batch_shapes = dict(arch.input_specs(shape_name, arch.config))
-        batch_sh = batch_shardings(batch_shapes, mesh)
-        fn = make_prefill_step(arch, step_cfg, mesh=mesh)
-        out_shapes = jax.eval_shape(fn, param_shapes, batch_shapes, key_spec)
-        out_sh = (None, tree_shardings(out_shapes[1], mesh))
-        return jax.jit(
-            fn, in_shardings=(param_sh, batch_sh, None), out_shardings=out_sh
-        ).lower(param_shapes, batch_shapes, key_spec)
-
-    # decode
-    cache_shapes = arch.cache_specs(
-        shape_name, arch.config,
-        cache_dtype="int8" if step_cfg.int8_cache else None)
-    cache_shapes = jax.tree_util.tree_map(
-        lambda s: jax.ShapeDtypeStruct(s.shape, serve_dtype)
-        if s.dtype == jnp.bfloat16 and mode_quant else s, cache_shapes)
-    cache_sh = tree_shardings(cache_shapes, mesh)
-    tok_shapes = dict(arch.input_specs(shape_name, arch.config))
-    tok_sh = batch_shardings(tok_shapes, mesh)
-    fn = make_decode_step(arch, step_cfg, mesh=mesh)
-    return jax.jit(
-        fn,
-        in_shardings=(param_sh, tok_sh["tokens"], cache_sh, None),
-        out_shardings=(None, cache_sh),
-        donate_argnums=(2,),
-    ).lower(param_shapes, tok_shapes["tokens"], cache_shapes, key_spec)
-
-
-def _unrolled(arch):
-    """Cost-shadow variant: fully unrolled layer scan so cost_analysis and
-    the collective parse see every layer (XLA counts while bodies once)."""
-    import dataclasses
-
-    return dataclasses.replace(
-        arch, config=dataclasses.replace(arch.config, scan_unroll=True)
-    )
-
-
-DEFAULT_TRAIN_MICROBATCH = 8  # grad accumulation: activation memory / 8
-# MoE dispatch buffers replicate tokens x top_k; VLM carries 26B params:
-# these archs need deeper accumulation to fit 16 GB/chip
-# NB: global_batch/microbatch must stay divisible by the DP extent (16),
-# else activations replicate: 256/16 = 16 rows/micro = 1 row per DP shard.
-TRAIN_MICROBATCH_OVERRIDES = {
-    "olmoe-1b-7b": 16, "deepseek-v2-lite-16b": 16, "internvl2-26b": 16,
-}
+LEGACY_FLAGS = (
+    flag("--arch", "arch.id"),
+    flag("--shape", "shape.cell", choices=list(SHAPES)),
+    flag("--mesh", "shape.mesh",
+         choices=["single", "multi", "debug", "debug_multi"]),
+    flag("--mode", "numerics.mode", choices=list(MODES)),
+    flag("--microbatch", "shape.microbatch", type=int),
+    flag("--no-unrolled-cost", "dryrun.cost_unrolled", const=False),
+    flag("--seq-parallel", "shape.seq_parallel", const=True),
+    flag("--bf16-logits", "arch.bf16_logits", const=True),
+    flag("--layout", "shape.layout", choices=["tp", "fsdp"]),
+    # legacy quirk preserved: --remat-policy full was a no-op
+    flag("--remat-policy", "arch.remat_policy",
+         choices=["full", "block_io"],
+         transform=lambda v: _SKIP if v == "full" else v),
+    flag("--cache-int8", "serving.int8_cache", const=True),
+    flag("--quant-opt", "dryrun.quant_opt", const=True),
+    flag("--variant", "dryrun.variant"),
+    flag("--kernel-impl", "kernels.policy"),
+    flag("--backward-sparsity", "sparsity.backward",
+         choices=["none", "auto", "ref", "jnp", "interpret", "pallas"]),
+    flag("--probe-density", "sparsity.probe_density", type=float),
+)
 
 
 def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
@@ -193,169 +78,41 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
              variant: str = "baseline", kernel_impl: str | None = None,
              backward_sparsity: str = "auto",
              probe_density: float = 0.5) -> dict:
-    import dataclasses as _dc
-
-    arch = get_arch(arch_id)
-    sh = SHAPES[shape_name]
-    if microbatch is None and sh.kind == "train":
-        microbatch = TRAIN_MICROBATCH_OVERRIDES.get(arch_id, DEFAULT_TRAIN_MICROBATCH)
-    if bf16_logits and hasattr(arch.config, "bf16_logits"):
-        arch = _dc.replace(arch, config=_dc.replace(arch.config, bf16_logits=True))
-    if remat_policy != "full" and hasattr(arch.config, "remat_policy"):
-        arch = _dc.replace(arch, config=_dc.replace(arch.config, remat_policy=remat_policy))
-    if shape_name in arch.skipped_shapes():
-        return {
-            "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
-            "mode": mode, "status": "skipped",
-            "reason": arch.skipped_shapes()[shape_name],
-        }
-    mesh = build_mesh(mesh_kind)
-    n_chips = mesh.devices.size
-    rules_override = ()
-    if seq_parallel:
-        rules_override = (("seq", (("model",), None)),)
-    if layout == "fsdp":
-        # pure DP x FSDP: batch over all mesh axes, no tensor parallelism.
-        # Wins when the model is small relative to the per-step token count
-        # (TP activation all-reduces >> FSDP weight all-gathers).
-        rules_override = rules_override + (
-            ("batch", (("pod", "data", "model"), ("data", "model"))),
-            ("heads", (None,)), ("kv_heads", (None,)),
-            ("mlp_act", (None,)), ("vocab_act", (None,)),
-            ("w_qkv", (None,)), ("w_mlp", (None,)), ("w_vocab", (None,)),
-            ("w_embed", (("data", "model"), ("data",))),
-            ("cache_batch", (("pod", "data", "model"), ("data", "model"), ("data",))),
-            ("cache_seq", (None,)),
-        )
-    spring_cfg = MODES[mode]
-    if quant_opt and spring_cfg.is_quantized:
-        spring_cfg = _dc.replace(spring_cfg, weights_pre_quantized=True,
-                                 operand_rounding="nearest")
-    kpolicy = kernel_registry.KernelPolicy.parse(kernel_impl or "")
-    spring_cfg = _dc.replace(spring_cfg, kernels=kpolicy)
-    step_cfg = StepConfig(
-        spring=spring_cfg,
-        backward_sparsity=backward_sparsity,
-        optimizer=OptimizerConfig(kind="adamw"),
-        microbatch=microbatch,
-        rules_override=rules_override,
-        int8_cache=cache_int8,
-    )
-    serve_dtype = jnp.bfloat16 if mode == "dense" else jnp.float32
-
-    kernel_registry.reset_dispatch_counts()
-    t0 = time.time()
-    lowered = run_lower(arch, shape_name, mesh, step_cfg, serve_dtype)
-    t_lower = time.time() - t0
-    # what the program actually dispatched at trace time, plus what the
-    # policy resolves for every registered op on this host (roofline_report
-    # renders both so BENCH/dry-run trajectories are backend-attributable)
-    kernel_dispatch = kernel_registry.dispatch_counts()
-    kernel_impls = kernel_registry.resolution_table(kpolicy)
-
-    t0 = time.time()
-    compiled = lowered.compile()
-    t_compile = time.time() - t0
-
-    bf16c = (mode == "dense")  # TPU-native bf16 math; CPU legalized it to f32
-    cost = cost_analysis_dict(compiled)
-    mem = memory_summary(compiled.memory_analysis())
-    hlo_text = compiled.as_text()
-    coll = collective_bytes(hlo_text, bf16_correct=bf16c)
-    adj = fusion_adjusted_bytes(hlo_text, bf16_correct=bf16c)["fusion_adjusted_bytes"]
-
-    # Cost-shadow: recompile with the layer scan unrolled AND the
-    # microbatch scan disabled so per-layer FLOPs/bytes/collectives are
-    # all visible (XLA cost analysis counts while bodies once; per-step
-    # totals are microbatch-invariant).  Memory comes from the real
-    # compile above; cost/collectives come from this one.
-    t_cost_compile = None
-    if cost_unrolled:
-        import dataclasses as _dc
-
-        t0 = time.time()
-        shadow_cfg = _dc.replace(step_cfg, microbatch=None)
-        shadow = run_lower(_unrolled(arch), shape_name, mesh, shadow_cfg, serve_dtype)
-        shadow_c = shadow.compile()
-        t_cost_compile = time.time() - t0
-        cost = cost_analysis_dict(shadow_c)
-        shadow_text = shadow_c.as_text()
-        coll = collective_bytes(shadow_text, bf16_correct=bf16c)
-        adj = fusion_adjusted_bytes(shadow_text, bf16_correct=bf16c)["fusion_adjusted_bytes"]
-        del shadow_c, shadow_text
-
-    mf = model_flops(arch, shape_name)
-    terms = roofline_terms(cost, coll["total"], n_chips, model_flops=mf,
-                           adjusted_bytes=adj)
-
-    result = {
-        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind, "mode": mode,
-        "variant": variant,
-        "status": "ok", "n_chips": int(n_chips), "microbatch": microbatch,
-        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
-        "cost_compile_s": round(t_cost_compile, 1) if t_cost_compile else None,
-        "kernel_policy": kpolicy.describe(),
-        "kernel_impls": kernel_impls,
-        "kernel_dispatch": kernel_dispatch,
-        "backward_sparsity": backward_sparsity,
-        "memory": mem, "collectives": coll, "roofline": terms,
-    }
-    if mode == "quant_sparse" and backward_sparsity != "none" \
-            and sh.kind == "train":
-        # Measured fwd/bwd tile-skip at the probe density: the lowered
-        # program never executes in a dry run, so this small eager probe
-        # is what attributes backward sparsity savings per cell.
-        from repro.kernels.masked_matmul.backward import sparsity_probe
-
-        result["sparsity_probe"] = sparsity_probe(probe_density, size=256)
-    if mode == "quant_sparse" and sh.kind == "decode":
-        # Serving twin of the sparsity probe: measured KV wire bytes of
-        # one packed block at the probe density, with the 20d+1 formula
-        # cross-check (roofline_report renders the table).
-        from repro.kernels.kv_cache.ops import kv_probe
-
-        result["kv_probe"] = kv_probe(probe_density)
-    if verbose:
-        print(json.dumps(result, indent=2))
-        print(f"peak bytes/chip (arg+out+temp-alias): {mem['peak_bytes_per_chip_est']/1e9:.3f} GB", file=sys.stderr)
-    return result
+    """Legacy keyword surface: builds the equivalent RunSpec and runs a
+    :class:`repro.api.DryrunSession` (full configs, like the old path)."""
+    spec = dryrun_spec(
+        arch_id, shape_name, mesh_kind, mode, microbatch=microbatch,
+        cost_unrolled=cost_unrolled, seq_parallel=seq_parallel,
+        bf16_logits=bf16_logits, layout=layout, remat_policy=remat_policy,
+        cache_int8=cache_int8, quant_opt=quant_opt, variant=variant,
+        kernel_impl=kernel_impl, backward_sparsity=backward_sparsity,
+        probe_density=probe_density)
+    return DryrunSession(spec).run(verbose=verbose)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True, choices=list(SHAPES))
-    ap.add_argument("--mesh", default="single",
-                    choices=["single", "multi", "debug", "debug_multi"])
-    ap.add_argument("--mode", default="dense", choices=list(MODES))
-    ap.add_argument("--microbatch", type=int, default=None)
-    ap.add_argument("--out", default=None)
-    ap.add_argument("--no-unrolled-cost", action="store_true",
-                    help="skip the unrolled cost-shadow compile")
-    ap.add_argument("--seq-parallel", action="store_true")
-    ap.add_argument("--bf16-logits", action="store_true")
-    ap.add_argument("--layout", default="tp", choices=["tp", "fsdp"])
-    ap.add_argument("--remat-policy", default="full", choices=["full", "block_io"])
-    ap.add_argument("--cache-int8", action="store_true")
-    ap.add_argument("--quant-opt", action="store_true")
-    ap.add_argument("--variant", default="baseline")
-    ap.add_argument("--kernel-impl", default=None,
-                    help="kernel policy spec, e.g. 'ref' or 'ssd_scan=jnp' "
-                         "(see repro.kernels.registry.KernelPolicy.parse)")
-    ap.add_argument("--backward-sparsity", default="auto",
-                    choices=["none", "auto", "ref", "jnp", "interpret", "pallas"],
-                    help="sparsity-aware backward pass for quant_sparse cells")
-    ap.add_argument("--probe-density", type=float, default=0.5,
-                    help="tile-granular density for the backward-skip probe")
-    args = ap.parse_args()
-    result = run_cell(args.arch, args.shape, args.mesh, args.mode, args.microbatch,
-                      cost_unrolled=not args.no_unrolled_cost,
-                      seq_parallel=args.seq_parallel, bf16_logits=args.bf16_logits,
-                      layout=args.layout, remat_policy=args.remat_policy,
-                      cache_int8=args.cache_int8, quant_opt=args.quant_opt,
-                      variant=args.variant, kernel_impl=args.kernel_impl,
-                      backward_sparsity=args.backward_sparsity,
-                      probe_density=args.probe_density)
+def build_parser():
+    ap = make_parser(__doc__, LEGACY_FLAGS, out=True)
+    return ap
+
+
+def main(argv=None):
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    try:
+        spec = spec_from_args("dryrun", args, LEGACY_FLAGS)
+    except Exception as e:  # SpecError -> argparse-style exit
+        raise SystemExit(f"error: {e}") from None
+    # the pre-RunSpec CLI required --arch/--shape; keep a bare invocation
+    # from silently compiling the default cell on the production mesh
+    # (arch.reduced=null resolves run-conditionally: dryrun = full config)
+    for path, old_flag in (("arch.id", "--arch"), ("shape.cell", "--shape")):
+        if spec.provenance.get(path, "default") == "default":
+            ap.error(f"{path} must be set (--spec file, --set {path}=..., "
+                     f"or the deprecated {old_flag})")
+    if args.explain:
+        print(spec.describe())
+        return 0
+    result = DryrunSession(spec).run(verbose=True)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

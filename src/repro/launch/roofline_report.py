@@ -162,8 +162,8 @@ def serving_table(results: list[dict]) -> str:
     latency percentiles, throughput, slot occupancy and measured KV
     wire traffic of the compressed pool."""
     lines = [
-        "| mode | slots | requests | tok/s | occupancy | p50 ms | p100 ms | KV wire/step | vs fp32 |",
-        "|---|---|---|---|---|---|---|---|---|",
+        "| mode | slots | requests | tok/s | occupancy | p50 ms | p100 ms | KV wire/step | vs fp32 | spec |",
+        "|---|---|---|---|---|---|---|---|---|---|",
     ]
     any_row = False
     for r in results:
@@ -177,7 +177,8 @@ def serving_table(results: list[dict]) -> str:
             f"| {r['tokens_per_s']:.1f} | {r['mean_occupancy']:.2f} "
             f"| {lat[len(lat)//2]*1e3:.0f} | {lat[-1]*1e3:.0f} "
             f"| {r['kv_mean_wire_bytes']/1e3:.1f}KB "
-            f"| {r['kv_traffic_reduction_vs_fp32']:.2f}x |")
+            f"| {r['kv_traffic_reduction_vs_fp32']:.2f}x "
+            f"| {r.get('spec_hash', '-')[:10]} |")
     return "\n".join(lines) if any_row else ""
 
 

@@ -1,65 +1,61 @@
-"""Serving launcher: the spring-serve continuous-batching engine with the
-SPRING numerics modes, runnable on CPU with reduced configs.
+"""Serving launcher: a thin adapter over the RunSpec API.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-      --reduced --batch 4 --slots 2 --prompt-len 32 --gen 16 \
-      --mode quant_sparse --kernel-impl ref
+  PYTHONPATH=src python -m repro.launch.serve --spec examples/specs/serve_quant_sparse.json
+  PYTHONPATH=src python -m repro.launch.serve --set arch.id=llama3.2-1b \
+      --set serving.slots=2 --set serving.queue=6 --set numerics.mode=quant_sparse
 
-``serve_session`` is a one-shot wrapper over :class:`ServingEngine`: it
-submits a synthetic batch of requests and drains the queue.  The
-pre-refactor static batch loop survives as
-:func:`static_reference_session` — the oracle the parity suite
-(tests/test_serving.py) seals the engine against, and the fallback for
-encoder-decoder archs (the engine serves decoder-only LMs).
+The engine session lives in :class:`repro.api.ServeSession`; the
+pre-refactor static batch loop survives behind ``serving.static=true``
+(and as the encoder-decoder fallback) — the oracle the parity suite
+(tests/test_serving.py) seals the engine against.  Legacy flag spellings
+(``--slots``, ``--queue``, ``--kernel-impl``, ...) shim to the same
+RunSpec fields with a DeprecationWarning.
 
 Serving numerics: quantized modes round to nearest (DESIGN.md §9) so a
 request's tokens are a function of the request alone, not of its batch
 co-tenants.
+
+``serve_session`` / ``static_reference_session`` / ``serving_config``
+keep their historical signatures as wrappers for programmatic callers.
 """
 
 from __future__ import annotations
 
-import argparse
-import dataclasses
 import json
-import time
 
-import jax
-import jax.numpy as jnp
+from repro.api.cli import flag, make_parser, run_main
+from repro.api.sessions import ServeSession, serve_spec
+from repro.api.spec import RunSpec, KernelsSection, NumericsSection
+from repro.core.spring_ops import MODES, SpringConfig  # legacy import site
 
-from repro.configs import get_arch
-from repro.core.spring_ops import DENSE, QUANT, QUANT_SPARSE, SpringConfig
-from repro.kernels.registry import KernelPolicy
-from repro.optim.optimizers import OptimizerConfig
-from repro.runtime.train import StepConfig
-from repro.serving.engine import ServingEngine
-from repro.serving.steps import make_decode_step, make_prefill_step
-
-MODES = {"dense": DENSE, "quant": QUANT, "quant_sparse": QUANT_SPARSE}
+LEGACY_FLAGS = (
+    flag("--arch", "arch.id"),
+    flag("--reduced", "arch.reduced", const=True),
+    flag("--batch", "shape.batch", type=int),
+    flag("--prompt-len", "shape.prompt_len", type=int),
+    flag("--gen", "shape.gen", type=int),
+    flag("--mode", "numerics.mode", choices=list(MODES)),
+    flag("--kernel-impl", "kernels.policy"),
+    flag("--slots", "serving.slots", type=int),
+    flag("--queue", "serving.queue", type=int),
+    flag("--greedy", "serving.greedy", const=True, dest="legacy_greedy"),
+    flag("--sample", "serving.greedy", const=False, dest="legacy_greedy"),
+    flag("--seed", "seeds.seed", type=int),
+    flag("--static", "serving.static", const=True),
+)
 
 
 def serving_config(mode: str, kernel_impl: str | None = None) -> SpringConfig:
     """SpringConfig for serving: the chosen mode with deterministic
     (nearest) rounding — SR is training's convergence device; at serving
-    time it would couple a request's tokens to its batch co-tenants."""
-    return dataclasses.replace(
-        MODES[mode], stochastic=False,
-        kernels=KernelPolicy.parse(kernel_impl or ""))
+    time it would couple a request's tokens to its batch co-tenants.
 
-
-def _synthetic_batch(arch, cfg, batch: int, prompt_len: int, key) -> dict:
-    """The launcher's stand-in traffic (same construction the static path
-    always used, so engine/static parity runs on identical prompts)."""
-    if arch.is_encdec:
-        return {
-            "frames": jax.random.normal(key, (batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16),
-            "tokens": jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab),
-        }
-    out = {"tokens": jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab)}
-    if cfg.vlm_prefix_len:
-        out["img_embeds"] = jax.random.normal(
-            key, (batch, cfg.vlm_prefix_len, cfg.d_model), jnp.bfloat16)
-    return out
+    Delegates to the RunSpec resolver (run="serve") so there is exactly
+    one place serving numerics are decided."""
+    return RunSpec(
+        run="serve", numerics=NumericsSection(mode=mode),
+        kernels=KernelsSection(policy=kernel_impl or "auto"),
+    ).resolve().spring
 
 
 def static_reference_session(
@@ -76,61 +72,13 @@ def static_reference_session(
     mesh=None,
 ) -> dict:
     """The pre-engine static path: one fixed batch, prefill once, decode
-    ``gen`` steps, throw the cache away.  Kept verbatim as (a) the parity
-    oracle the engine is sealed against and (b) the encdec fallback."""
-    arch = get_arch(arch_id)
-    view = arch.view(reduced=reduced)
-    cfg = view.config
-    step_cfg = StepConfig(spring=serving_config(mode, kernel_impl),
-                          optimizer=OptimizerConfig())
-    key = jax.random.PRNGKey(seed)
-
-    from repro.models import encdec as ed_mod
-    from repro.models import lm as lm_mod
-
-    init = ed_mod.encdec_init if arch.is_encdec else lm_mod.lm_init
-    params = init(key, cfg)
-    batch_inputs = _synthetic_batch(arch, cfg, batch, prompt_len, key)
-
-    prefill = jax.jit(make_prefill_step(view, step_cfg, mesh=mesh, reduced=True))
-    decode = jax.jit(make_decode_step(view, step_cfg, mesh=mesh, reduced=True))
-
-    t0 = time.monotonic()
-    if arch.is_encdec:
-        from repro.models.layers import SpringContext
-
-        cache = ed_mod.encdec_init_cache(params, cfg, batch_inputs["frames"],
-                                         SpringContext(), max_len=prompt_len + gen)
-        logits = jnp.zeros((batch, cfg.vocab))
-        next_tok = batch_inputs["tokens"][:, 0]
-    else:
-        # decode continues past the prompt: extend the cache buffers
-        from repro.models.lm import pad_cache
-
-        logits, cache = prefill(params, batch_inputs, key)
-        cache = pad_cache(cache, gen)
-        next_tok = jnp.argmax(logits, -1)
-    t_prefill = time.monotonic() - t0
-
-    tokens_out = []
-    t0 = time.monotonic()
-    for i in range(gen):
-        logits, cache = decode(params, next_tok, cache, jax.random.fold_in(key, i))
-        next_tok = (jnp.argmax(logits, -1) if greedy
-                    else jax.random.categorical(jax.random.fold_in(key, 1000 + i), logits))
-        tokens_out.append(next_tok)
-    jax.block_until_ready(logits)
-    t_decode = time.monotonic() - t0
-
-    seqs = jnp.stack(tokens_out, axis=1)
-    return {
-        "generated": seqs,
-        "prefill_s": t_prefill,
-        "decode_s": t_decode,
-        "tokens_per_s": batch * gen / t_decode if t_decode else 0.0,
-        "finite": bool(jnp.all(jnp.isfinite(logits))),
-        "engine": False,
-    }
+    ``gen`` steps, throw the cache away.  Kept as (a) the parity oracle
+    the engine is sealed against and (b) the encdec fallback."""
+    spec = serve_spec(arch_id, reduced=reduced, batch=batch,
+                      prompt_len=prompt_len, gen=gen, mode=mode,
+                      kernel_impl=kernel_impl, greedy=greedy, seed=seed,
+                      static=True)
+    return ServeSession(spec, mesh=mesh).run()
 
 
 def serve_session(
@@ -148,93 +96,31 @@ def serve_session(
     queue: int | None = None,
     mesh=None,
 ) -> dict:
-    """One-shot engine session: submit ``queue`` synthetic requests (default
-    ``batch``) over a pool of ``slots`` slots (default ``batch``) and drain.
-
-    Returns the legacy result surface (``generated``/``prefill_s``/
-    ``decode_s``/``tokens_per_s``/``finite``) plus the engine's metrics
-    (per-request latency, occupancy, KV wire bytes & compression).
-    """
-    arch = get_arch(arch_id)
-    if arch.is_encdec:
-        # encoder-decoder archs keep the static loop (DESIGN.md §9 scope)
-        return static_reference_session(
-            arch_id, reduced=reduced, batch=batch, prompt_len=prompt_len,
-            gen=gen, mode=mode, kernel_impl=kernel_impl, greedy=greedy,
-            seed=seed, mesh=mesh)
-
-    view = arch.view(reduced=reduced)
-    cfg = view.config
-    # None means "default to batch"; an explicit 0 must reach the engine's
-    # own validation rather than being silently replaced
-    n_requests = batch if queue is None else queue
-    n_slots = batch if slots is None else slots
-    step_cfg = StepConfig(spring=serving_config(mode, kernel_impl),
-                          optimizer=OptimizerConfig())
-    key = jax.random.PRNGKey(seed)
-
-    from repro.models.lm import lm_init
-
-    params = lm_init(key, cfg)
-    # queued requests beyond the first batch reuse the synthetic
-    # construction with a folded key (distinct prompts, reproducible)
-    prompts = []
-    img = []
-    for chunk in range((n_requests + batch - 1) // batch):
-        bi = _synthetic_batch(arch, cfg, batch, prompt_len,
-                              jax.random.fold_in(key, chunk) if chunk else key)
-        for b in range(batch):
-            prompts.append([int(t) for t in bi["tokens"][b]])
-            img.append(bi.get("img_embeds")[b] if "img_embeds" in bi else None)
-    prompts, img = prompts[:n_requests], img[:n_requests]
-
-    engine = ServingEngine(view, step_cfg, params=params, n_slots=n_slots,
-                           max_len=prompt_len + gen + 1, greedy=greedy,
-                           mesh=mesh, reduced=False, seed=seed)
-    for i, p in enumerate(prompts):
-        engine.submit_prompt(p, gen, seed=seed + i, img_embeds=img[i])
-    out = engine.run()
-    out["generated"] = jnp.asarray(
-        [r["tokens"] for r in out["per_request"]], jnp.int32)
-    out["engine"] = True
-    out["slots"] = n_slots
-    out["mode"] = mode
-    return out
+    """One-shot engine session: submit ``queue`` synthetic requests
+    (default ``batch``) over a pool of ``slots`` slots (default ``batch``)
+    and drain.  Returns the legacy result surface plus the engine metrics
+    and the canonical resolved spec."""
+    spec = serve_spec(arch_id, reduced=reduced, batch=batch,
+                      prompt_len=prompt_len, gen=gen, mode=mode,
+                      kernel_impl=kernel_impl, greedy=greedy, seed=seed,
+                      slots=slots, queue=queue)
+    return ServeSession(spec, mesh=mesh).run()
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--mode", default="dense", choices=list(MODES))
-    ap.add_argument("--kernel-impl", default=None,
-                    help="kernel-dispatch policy, e.g. 'ref', 'interpret', "
-                         "'ssd_scan=jnp' (default: auto)")
-    ap.add_argument("--slots", type=int, default=None,
-                    help="engine slot-pool size (default: --batch)")
-    ap.add_argument("--queue", type=int, default=None,
-                    help="total requests to submit (default: --batch); the "
-                         "surplus waits FCFS and joins mid-flight")
-    ap.add_argument("--greedy", dest="greedy", action="store_true", default=True)
-    ap.add_argument("--sample", dest="greedy", action="store_false",
-                    help="sample with each request's own PRNG key")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--static", action="store_true",
-                    help="run the pre-engine static reference path")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the full engine metrics as JSON (write into "
-                         "results/serving/ for roofline_report to render "
-                         "the 'Serving engine sessions' table)")
-    args = ap.parse_args()
-    fn = static_reference_session if args.static else serve_session
-    kw = {} if args.static else {"slots": args.slots, "queue": args.queue}
-    out = fn(args.arch, reduced=args.reduced, batch=args.batch,
-             prompt_len=args.prompt_len, gen=args.gen, mode=args.mode,
-             kernel_impl=args.kernel_impl, greedy=args.greedy,
-             seed=args.seed, **kw)
+#: This adapter's historical defaults (the old argparse had --batch
+#: default=4), layered *below* file/env/CLI so bare invocations keep
+#: their pre-RunSpec behavior; provenance labels them launcher-default.
+CLI_BASE = {"shape": {"batch": 4}}
+
+
+def build_parser():
+    return make_parser(__doc__, LEGACY_FLAGS, json_out=True)
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    spec = run_main("serve", args, LEGACY_FLAGS, base=CLI_BASE)
+    out = ServeSession(spec).run()
     print(f"prefill {out['prefill_s']*1e3:.1f}ms, decode {out['decode_s']*1e3:.1f}ms "
           f"({out['tokens_per_s']:.1f} tok/s), finite={out['finite']}")
     if out.get("engine"):
@@ -246,6 +132,7 @@ def main():
               f"({out['kv_traffic_reduction_vs_fp32']:.2f}x less traffic "
               f"than a dense fp32 pool)")
     print("sample tokens:", out["generated"][0][:12])
+    print(f"spec {out['spec_hash']}")
     if args.json:
         payload = {k: v for k, v in out.items() if k != "generated"}
         payload["generated_first"] = [int(t) for t in out["generated"][0]]

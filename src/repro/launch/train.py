@@ -1,36 +1,50 @@
-"""Training launcher: end-to-end driver (data -> train_step -> checkpoint
--> resume), runnable on CPU with reduced configs and on a pod with the
-production mesh.
+"""Training launcher: a thin adapter over the RunSpec API.
 
-Example (CPU, reduced config, a few hundred steps):
-  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
-      --reduced --steps 300 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+The native surface is a spec file plus dotted overrides:
+
+  PYTHONPATH=src python -m repro.launch.train --spec examples/specs/train_quant_sparse.json
+  PYTHONPATH=src python -m repro.launch.train --set arch.id=llama3.2-1b \
+      --set train.steps=300 --set shape.batch=8 --set shape.seq=128
+
+Every pre-redesign flag (``--arch``, ``--steps``, ``--stash``,
+``--kernel-impl``, ``--backward-sparsity``, ...) still works as a
+deprecated shim that resolves to the same RunSpec field (see
+``repro.api.cli``).  ``--explain`` prints each field with the layer that
+set it; ``--json`` writes the result with the canonical resolved spec so
+the run is reproducible from one artifact.
+
+``train_loop`` keeps its historical keyword signature as a wrapper over
+``TrainSession`` for programmatic callers (tests, examples, benches).
 """
 
 from __future__ import annotations
 
-import argparse
-import dataclasses
+import json
 import logging
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.checkpoint import CheckpointManager
-from repro.configs import get_arch
-from repro.core.fixedpoint import SPRING_FORMAT
-from repro.core.spring_ops import DENSE, QUANT, QUANT_SPARSE, SpringConfig
-from repro.kernels.registry import KernelPolicy
-from repro.memstash.config import MemstashConfig
-from repro.data.pipeline import DataConfig, SyntheticLMStream
-from repro.optim.optimizers import OptimizerConfig
-from repro.runtime.resilience import StragglerWatchdog
-from repro.runtime.train import StepConfig, TrainState, init_train_state, make_train_step
+from repro.api.cli import flag, make_parser, run_main
+from repro.api.sessions import TrainSession, train_spec
+from repro.core.spring_ops import MODES  # re-export (legacy import site)
 
 log = logging.getLogger("repro.train")
 
-MODES = {"dense": DENSE, "quant": QUANT, "quant_sparse": QUANT_SPARSE}
+#: Legacy flag spellings -> RunSpec fields (all warn with the --set form).
+LEGACY_FLAGS = (
+    flag("--arch", "arch.id"),
+    flag("--reduced", "arch.reduced", const=True),
+    flag("--steps", "train.steps", type=int),
+    flag("--batch", "shape.batch", type=int),
+    flag("--seq", "shape.seq", type=int),
+    flag("--mode", "numerics.mode", choices=list(MODES)),
+    flag("--lr", "optimizer.lr", type=float),
+    flag("--fixed-point-weights", "numerics.fixed_point_weights", const=True),
+    flag("--kernel-impl", "kernels.policy"),
+    flag("--backward-sparsity", "sparsity.backward",
+         choices=["none", "auto", "ref", "jnp", "interpret", "pallas"]),
+    flag("--stash", "memstash.policy", choices=["none", "remat", "stash"]),
+    flag("--ckpt-dir", "train.ckpt_dir"),
+    flag("--ckpt-every", "train.ckpt_every", type=int),
+)
 
 
 def train_loop(
@@ -52,109 +66,33 @@ def train_loop(
     mesh=None,
     seed: int = 0,
 ) -> dict:
-    arch = get_arch(arch_id)
-    cfg = arch.reduced() if reduced else arch.config
-    cfg = dataclasses.replace(cfg)  # defensive copy
-    if stash != "none":
-        if hasattr(cfg, "remat_policy"):
-            if stash == "stash":
-                # route the residual-stream checkpoints through the memstash
-                # subsystem (compressed activation store; DESIGN.md §4.3)
-                cfg = dataclasses.replace(cfg, remat_policy="stash")
-            else:  # "remat": force plain recompute even if the config
-                # (e.g. a reduced variant) disabled remat
-                cfg = dataclasses.replace(cfg, remat=True, remat_policy="full")
-        else:
-            log.warning("--stash %s has no effect for %s (config has no remat_policy)",
-                        stash, arch_id)
-    spring_cfg = dataclasses.replace(
-        MODES[mode], kernels=KernelPolicy.parse(kernel_impl or ""))
-    step_cfg = StepConfig(
-        spring=spring_cfg,
-        backward_sparsity=backward_sparsity,
-        memstash=MemstashConfig(policy=stash),
-        optimizer=OptimizerConfig(
-            # warmup must not depend on ``steps``: a resumed run would
-            # otherwise follow a different LR schedule than the original
-            kind="adamw", lr=lr, warmup_steps=10,
-            weight_format=SPRING_FORMAT if fixed_point_weights else None,
-        ),
-    )
-
-    view = arch.view(config=cfg)  # arch view with the chosen config
-    data = SyntheticLMStream(DataConfig(seed=seed, vocab=cfg.vocab, seq_len=seq, global_batch=batch))
-    state = init_train_state(jax.random.PRNGKey(seed), view, step_cfg, reduced=True)
-    start_step = 0
-
-    manager = CheckpointManager(ckpt_dir, every_steps=ckpt_every) if ckpt_dir else None
-    if manager is not None:
-        restored = manager.restore_or_none()
-        if restored is not None:
-            start_step, tree = restored
-            state = TrainState(*tree)
-            log.info("resumed from step %d", start_step)
-
-    step_fn = jax.jit(make_train_step(view, step_cfg, mesh=mesh), donate_argnums=(0,))
-    watchdog = StragglerWatchdog()
-    losses = []
-    for step in range(start_step, steps):
-        tokens = data.batch(step)
-        watchdog.step_start()
-        state, metrics = step_fn(state, {"tokens": tokens})
-        loss = float(metrics["loss"])
-        watchdog.step_end(step)
-        losses.append(loss)
-        if step % log_every == 0 or step == steps - 1:
-            log.info("step %d loss %.4f grad_norm %.3f", step, loss, float(metrics["grad_norm"]))
-        if manager is not None:
-            manager.maybe_save(step + 1, tuple(state.tree_flatten()[0]),
-                               {"arch": arch_id, "mode": mode})
-    if manager is not None:
-        manager.maybe_save(steps, tuple(state.tree_flatten()[0]),
-                           {"arch": arch_id, "mode": mode}, force=True)
-    return {
-        "first_loss": losses[0] if losses else None,
-        "last_loss": losses[-1] if losses else None,
-        "losses": losses,
-        "slow_steps": sum(1 for e in watchdog.events if e.slow),
-        "state": state,
-    }
+    """Legacy keyword surface: builds the equivalent RunSpec and runs a
+    :class:`repro.api.TrainSession`."""
+    spec = train_spec(
+        arch_id, reduced=reduced, steps=steps, batch=batch, seq=seq,
+        mode=mode, lr=lr, fixed_point_weights=fixed_point_weights,
+        kernel_impl=kernel_impl, backward_sparsity=backward_sparsity,
+        stash=stash, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+        log_every=log_every, seed=seed)
+    return TrainSession(spec, mesh=mesh).run()
 
 
-def main():
+def build_parser():
+    return make_parser(__doc__, LEGACY_FLAGS, json_out=True)
+
+
+def main(argv=None):
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(name)s %(message)s")
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--mode", default="dense", choices=list(MODES))
-    ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--fixed-point-weights", action="store_true")
-    ap.add_argument("--kernel-impl", default=None,
-                    help="kernel-dispatch policy, e.g. 'ref', 'interpret', "
-                         "'ssd_scan=jnp,masked_matmul=ref' (default: auto)")
-    ap.add_argument("--backward-sparsity", default="auto",
-                    choices=["none", "auto", "ref", "jnp", "interpret", "pallas"],
-                    help="sparsity-aware backward pass (quant_sparse mode): "
-                         "route dL/dX / dL/dW through the masked_matmul_dx/dw "
-                         "kernels; 'none' keeps dense autodiff")
-    ap.add_argument("--stash", default="none", choices=["none", "remat", "stash"],
-                    help="memstash activation-checkpoint policy")
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=100)
-    args = ap.parse_args()
-    out = train_loop(
-        args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
-        seq=args.seq, mode=args.mode, lr=args.lr,
-        fixed_point_weights=args.fixed_point_weights,
-        kernel_impl=args.kernel_impl, backward_sparsity=args.backward_sparsity,
-        stash=args.stash,
-        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-    )
+    args = build_parser().parse_args(argv)
+    spec = run_main("train", args, LEGACY_FLAGS)
+    out = TrainSession(spec).run()
     print(f"loss {out['first_loss']:.4f} -> {out['last_loss']:.4f} "
-          f"({args.steps} steps, slow={out['slow_steps']})")
+          f"({spec.train.steps} steps, slow={out['slow_steps']}) "
+          f"[spec {out['spec_hash']}]")
+    if args.json:
+        payload = {k: v for k, v in out.items() if k != "state"}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
 
 
 if __name__ == "__main__":

@@ -8,6 +8,12 @@ and the multi-pod dry-run lower.
 Numerics mode (dense | quant | quant_sparse) comes from the SpringConfig
 in ``StepConfig`` — the paper's technique is a first-class switch, not a
 fork of the trainer.
+
+Since the RunSpec API landed (DESIGN.md §10), ``StepConfig`` is normally
+*produced*, not hand-assembled: ``RunSpec.resolve().step`` (or the
+``StepConfig.from_runspec`` convenience below) is the one place the five
+config surfaces — SpringConfig, StepConfig, KernelPolicy,
+MemstashConfig, serving arguments — are threaded together.
 """
 
 from __future__ import annotations
@@ -52,6 +58,27 @@ class StepConfig:
     memstash: MemstashConfig = MemstashConfig()
     # int8 KV cache for serving (SPRING P2 on the cache)
     int8_cache: bool = False
+
+    @classmethod
+    def from_runspec(cls, spec) -> "StepConfig":
+        """Resolve a :class:`repro.api.RunSpec` (or a spec dict / JSON
+        artifact embedding one under a ``"spec"`` key, as every session
+        result does) to the StepConfig its run mode implies — the single
+        resolution path the launchers use."""
+        import json as _json
+
+        from repro.api.spec import RunSpec, SpecError
+
+        if isinstance(spec, str):
+            try:
+                spec = _json.loads(spec)
+            except _json.JSONDecodeError as e:
+                raise SpecError(f"invalid spec JSON: {e}") from None
+        if isinstance(spec, dict):
+            if "run" not in spec and isinstance(spec.get("spec"), dict):
+                spec = spec["spec"]  # a run artifact embedding its spec
+            spec = RunSpec.from_dict(spec)
+        return spec.resolve().step
 
 
 class TrainState:

@@ -45,6 +45,20 @@ class ServingEngine:
     archs are served by the one-shot static fallback in ``launch/serve``.
     """
 
+    @classmethod
+    def from_spec(cls, spec, *, params=None, mesh=None, resolved=None):
+        """Build an engine from a ``run="serve"`` RunSpec: the slot pool,
+        pool length, sampling mode, numerics, and kernel policy all come
+        from the spec (``resolved`` may pass a pre-computed
+        ``spec.resolve()`` to avoid resolving twice)."""
+        r = resolved if resolved is not None else spec.resolve()
+        s = spec.serving
+        return cls(
+            r.view, r.step, params=params,
+            n_slots=spec.shape.batch if s.slots is None else s.slots,
+            max_len=spec.shape.prompt_len + spec.shape.gen + 1,
+            greedy=s.greedy, mesh=mesh, reduced=False, seed=spec.seeds.seed)
+
     def __init__(self, arch, step_cfg, *, params=None, n_slots: int = 4,
                  max_len: int = 256, greedy: bool = True, mesh=None,
                  reduced: bool = True, seed: int = 0):

@@ -44,3 +44,8 @@ def pytest_configure(config):
         "serving: continuous-batching engine parity/property/KV-roundtrip "
         "suite (CI serving job runs `pytest -m serving`)",
     )
+    config.addinivalue_line(
+        "markers",
+        "spec: RunSpec round-trip/parity/coverage suite "
+        "(CI spec job runs `pytest -m spec`)",
+    )

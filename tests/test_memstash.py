@@ -153,6 +153,42 @@ def test_checkpoint_apply_policies_agree(policy):
 # -- policy resolution --------------------------------------------------------
 
 
+def test_default_memstash_family_dispatch_via_spec_resolver():
+    """ISSUE 5 satellite: ``default_memstash`` family dispatch is driven
+    by the spec resolver — ``memstash.policy="auto"`` resolves per
+    workload family through the one source of truth, for every family the
+    registry actually carries plus the CNN workloads."""
+    from repro.api.spec import build_spec
+    from repro.configs import ARCHS
+    from repro.configs.base import default_memstash
+
+    families = {a.family for a in ARCHS.values()}
+    assert families == {"dense", "hybrid", "vlm", "moe", "ssm", "audio"}
+    # the paper CNNs are genuinely sparse post-ReLU: compressed stash wins
+    assert default_memstash("cnn").policy == "stash"
+    # every LM-side family: dense residual streams -> remat
+    for family in families:
+        assert default_memstash(family).policy == "remat", family
+
+    for arch_id, arch in sorted(ARCHS.items()):
+        spec = build_spec("train", use_env=False,
+                          overrides=[("arch.id", arch_id, "test")])
+        resolved = spec.resolve()
+        want = default_memstash(arch.family).policy
+        assert resolved.memstash_policy == want, (arch_id, arch.family)
+        assert resolved.step.memstash.policy == want
+        # the family *recommendation* must not re-route the arch config —
+        # only an explicitly requested policy does (provenance-aware)
+        assert getattr(resolved.config, "remat_policy", None) != "stash"
+        explicit = build_spec(
+            "train", use_env=False,
+            overrides=[("arch.id", arch_id, "test"),
+                       ("memstash.policy", "stash", "test")]).resolve()
+        assert explicit.memstash_policy == "stash"
+        if hasattr(explicit.config, "remat_policy"):
+            assert explicit.config.remat_policy == "stash"
+
+
 def test_policy_per_layer_overrides_and_min_elems():
     cfg = MemstashConfig(policy="stash",
                          per_layer=(("head*", "none"), ("s0b*", "remat")),
