@@ -101,9 +101,33 @@ def rows() -> list[tuple]:
     return engine_rows + _format_rows()
 
 
+#: spans the engine opens on one decode tick (tick + schedule + decode +
+#: sample + repack, plus prefill/install on admit ticks) — the multiplier
+#: for the disabled-path overhead gate below
+SPANS_PER_TICK = 8
+
+
+def _disabled_span_overhead_us(iters: int = 20000) -> float:
+    """Measured cost of one disabled ``telemetry.span`` enter/exit (the
+    no-op path: a thread-local load + None test + shared null context)."""
+    import time as _time
+
+    from repro import telemetry
+
+    assert telemetry.tracer() is None, "overhead probe needs telemetry off"
+    with telemetry.span("warmup"):
+        pass
+    t0 = _time.perf_counter()
+    for _ in range(iters):
+        with telemetry.span("overhead.probe"):
+            pass
+    return (_time.perf_counter() - t0) / iters * 1e6
+
+
 def smoke() -> int:
     """CI gate: the quant_sparse engine must beat a dense fp32 KV pool by
-    >= 2x on measured per-step wire bytes, and decode must stay finite."""
+    >= 2x on measured per-step wire bytes, decode must stay finite, and
+    the disabled spring-trace path must cost < 5% of a decode step."""
     engine_rows, out = _engine_rows()
     failures = []
     if not out["finite"]:
@@ -120,8 +144,19 @@ def smoke() -> int:
     relu_ratio = [r[2] for r in fmt if r[0] == "serving.kv_pack.d50"][0]
     if relu_ratio < 2.0:
         failures.append(f"kv_pack ratio at ReLU density {relu_ratio:.2f}x < 2x")
+    # overhead gate: per-call no-op span cost x spans/tick vs the measured
+    # decode step (a direct estimate — comparing two full engine runs
+    # would drown the signal in CI timing noise)
+    step_us = out["decode_s"] / max(out["decode_steps"], 1) * 1e6
+    span_us = _disabled_span_overhead_us()
+    overhead = span_us * SPANS_PER_TICK / step_us if step_us else 0.0
+    tel_rows = [("serving.telemetry.disabled_span", span_us, overhead, "-")]
+    if overhead >= 0.05:
+        failures.append(
+            f"disabled-telemetry overhead {overhead:.2%} of a decode step "
+            f"({span_us:.3f}us/span x {SPANS_PER_TICK}) >= 5%")
     print("name,us_per_call,derived,impl")
-    for name, us, derived, impl in engine_rows + fmt:
+    for name, us, derived, impl in engine_rows + fmt + tel_rows:
         print(f"{name},{us:.2f},{derived:.6g},{impl}")
     for f in failures:
         print(f"SERVING SMOKE FAILURE: {f}", file=sys.stderr)

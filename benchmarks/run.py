@@ -141,6 +141,12 @@ def main() -> None:
             "rows": records,
             "failures": failures,
         }
+        # spring-trace snapshot: whatever the suites drove through the
+        # one metrics registry (kernel dispatch counts, eager hook
+        # histograms, engine gauges) rides along in the artifact
+        from repro import telemetry
+
+        payload["telemetry"] = {"metrics": telemetry.metrics().snapshot()}
         os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)

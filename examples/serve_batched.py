@@ -65,6 +65,13 @@ def main(argv: list | None = None):
               f"p100 {lat[-1]*1e3:.0f} ms  occupancy {out['mean_occupancy']:.2f}")
         print(f"  kv:      {out['kv_mean_wire_bytes']/1e3:.1f} KB/step wire, "
               f"{out['kv_traffic_reduction_vs_fp32']:.2f}x less than dense fp32")
+        for r in out["per_request"]:
+            print(f"  req {r['rid']:>3}: queue {r['queue_s']*1e3:6.1f} ms  "
+                  f"ttft {r['ttft_s']*1e3:6.1f} ms  "
+                  f"total {r['latency_s']*1e3:6.1f} ms  "
+                  f"{r['n_tokens']} tok  ticks {r['enqueue_tick']}->"
+                  f"{r['first_token_tick']}->{r['finish_tick']} "
+                  f"({r['finished_by']})")
     print(f"  sample:  {out['generated'][0][:10].tolist()}")
     assert out["finite"]
     return out

@@ -25,6 +25,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.api.spec import RunSpec, SpecError, build_spec
 from repro.configs import SHAPES
 
@@ -45,8 +46,37 @@ class Session:
         self.resolved = spec.resolve()
         self.mesh = mesh
 
+    def trace_path(self) -> str:
+        """Effective Chrome-trace output path ('' = telemetry off).
+        An enabled spec with no explicit path still writes a trace — the
+        acceptance contract is that flipping ``telemetry.enabled`` alone
+        yields a Perfetto-loadable artifact."""
+        t = self.spec.telemetry
+        if not t.enabled:
+            return ""
+        return t.trace_path or f"spring_{self.spec.run}_trace.json"
+
+    def telemetry_scope(self):
+        """Ambient spring-trace scope for this run (no-op when disabled);
+        session bodies run inside it so engine/kernel/memstash spans land
+        in one tracer, written to :meth:`trace_path` on exit."""
+        t = self.spec.telemetry
+        cfg = telemetry.TelemetryConfig(
+            enabled=t.enabled, trace_path=self.trace_path(),
+            sample_rate=t.sample_rate)
+        return telemetry.scope(cfg, metadata={
+            "run": self.spec.run, "spec_hash": self.spec.spec_hash()})
+
     def _with_payload(self, out: dict) -> dict:
         out.update(self.spec.payload())
+        if self.spec.telemetry.enabled:
+            tr = telemetry.tracer()
+            out["telemetry"] = {
+                "metrics": telemetry.metrics().snapshot(),
+                "trace_path": self.trace_path(),
+                "sample_rate": self.spec.telemetry.sample_rate,
+                "spans": len(tr) if tr is not None else 0,
+            }
         return out
 
 
@@ -57,6 +87,10 @@ class TrainSession(Session):
     run_mode = "train"
 
     def run(self) -> dict:
+        with self.telemetry_scope():
+            return self._run_body()
+
+    def _run_body(self) -> dict:
         from repro.checkpoint import CheckpointManager
         from repro.data.pipeline import DataConfig, SyntheticLMStream
         from repro.runtime.resilience import StragglerWatchdog
@@ -91,17 +125,28 @@ class TrainSession(Session):
         meta = {"arch": spec.arch.id, "mode": spec.numerics.mode,
                 "spec_hash": spec.spec_hash()}
         for step in range(start_step, steps):
-            tokens = data.batch(step)
-            watchdog.step_start()
-            state, metrics = step_fn(state, {"tokens": tokens})
-            loss = float(metrics["loss"])
-            watchdog.step_end(step)
-            losses.append(loss)
-            if step % spec.train.log_every == 0 or step == steps - 1:
-                log.info("step %d loss %.4f grad_norm %.3f", step, loss,
-                         float(metrics["grad_norm"]))
-            if manager is not None:
-                manager.maybe_save(step + 1, tuple(state.tree_flatten()[0]), meta)
+            with telemetry.span("train.step", step=step):
+                with telemetry.span("train.step.data"):
+                    tokens = data.batch(step)
+                watchdog.step_start()
+                with telemetry.span("train.step.device"):
+                    state, metrics = step_fn(state, {"tokens": tokens})
+                    if telemetry.enabled():
+                        # pin dispatch+compute inside the device span so
+                        # the host span measures host work only; changes
+                        # when we wait, never what is computed
+                        jax.block_until_ready(metrics)
+                with telemetry.span("train.step.host"):
+                    loss = float(metrics["loss"])
+                    watchdog.step_end(step)
+                    losses.append(loss)
+                    if step % spec.train.log_every == 0 or step == steps - 1:
+                        log.info("step %d loss %.4f grad_norm %.3f", step,
+                                 loss, float(metrics["grad_norm"]))
+                    if manager is not None:
+                        manager.maybe_save(step + 1,
+                                           tuple(state.tree_flatten()[0]),
+                                           meta)
         if manager is not None:
             manager.maybe_save(steps, tuple(state.tree_flatten()[0]), meta,
                                force=True)
@@ -146,11 +191,12 @@ class ServeSession(Session):
         self.params = params
 
     def run(self) -> dict:
-        arch = self.resolved.arch
-        if self.spec.serving.static or arch.is_encdec:
-            # encoder-decoder archs keep the static loop (DESIGN.md §9)
-            return self._with_payload(self._static())
-        return self._with_payload(self._engine())
+        with self.telemetry_scope():
+            arch = self.resolved.arch
+            if self.spec.serving.static or arch.is_encdec:
+                # encoder-decoder archs keep the static loop (DESIGN.md §9)
+                return self._with_payload(self._static())
+            return self._with_payload(self._engine())
 
     def _static(self) -> dict:
         """The pre-engine static path: one fixed batch, prefill once,
@@ -427,6 +473,10 @@ class DryrunSession(Session):
                          serve_dtype)
 
     def run(self, verbose: bool = True) -> dict:
+        with self.telemetry_scope():
+            return self._run_body(verbose)
+
+    def _run_body(self, verbose: bool = True) -> dict:
         from repro.kernels import registry as kernel_registry
         from repro.launch.hlo_analysis import (
             collective_bytes,

@@ -206,6 +206,24 @@ class SeedsSection:
     seed: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class TelemetrySection:
+    """spring-trace: span tracing + metrics export (DESIGN.md §11).
+
+    Off by default — the disabled path is a no-op and runs carry no
+    telemetry payload.  Enabling must never change computed values, only
+    add measurement (sealed by the parity test in test_telemetry.py).
+    """
+
+    enabled: bool = False
+    #: Chrome trace-event JSON output ("" = derive from train.out_dir /
+    #: the --json artifact stem; load in Perfetto / chrome://tracing)
+    trace_path: str = ""
+    #: fraction of root spans recorded, deterministic accumulator (no
+    #: PRNG); nested spans inherit the root's decision
+    sample_rate: float = 1.0
+
+
 _SECTIONS = {
     "arch": ArchSection,
     "shape": ShapeSection,
@@ -218,6 +236,7 @@ _SECTIONS = {
     "serving": ServingSection,
     "dryrun": DryrunSection,
     "seeds": SeedsSection,
+    "telemetry": TelemetrySection,
 }
 
 _CHOICES = {
@@ -331,6 +350,7 @@ class RunSpec:
     serving: ServingSection = ServingSection()
     dryrun: DryrunSection = DryrunSection()
     seeds: SeedsSection = SeedsSection()
+    telemetry: TelemetrySection = TelemetrySection()
     provenance: Mapping[str, str] = dataclasses.field(
         default_factory=dict, compare=False, repr=False)
 
@@ -406,6 +426,8 @@ class RunSpec:
                 f"{_suggest(self.shape.cell, SHAPES)}")
         if not 0.0 <= self.sparsity.probe_density <= 1.0:
             raise SpecError("sparsity.probe_density must be in [0, 1]")
+        if not 0.0 < self.telemetry.sample_rate <= 1.0:
+            raise SpecError("telemetry.sample_rate must be in (0, 1]")
         try:
             KernelPolicy.parse(self._kernel_spec())
         except ValueError as e:

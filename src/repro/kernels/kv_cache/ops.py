@@ -193,7 +193,7 @@ def kv_pack(x: jax.Array, impl: str | None = None) -> dict:
     """
     kimpl = registry.resolve("kv_pack", impl)
     packed = kimpl.fn(x)
-    if registry.metrics_recording() and not isinstance(
+    if registry.metrics_active() and not isinstance(
             packed["nnz"], jax.core.Tracer):
         nnz = float(packed["nnz"])
         registry.note_metric(

@@ -112,7 +112,7 @@ def mask_pack(x: jax.Array, impl: str | None = None) -> jax.Array:
     """Flattened packed occupancy mask words for any-shaped ``x``."""
     kimpl = registry.resolve("mask_pack", impl)
     words = kimpl.fn(x)
-    if registry.metrics_recording() and not isinstance(words, jax.core.Tracer):
+    if registry.metrics_active() and not isinstance(words, jax.core.Tracer):
         # measured wire bytes of the packed representation: 1 bit/elem in
         # whole uint32 words, ceil(n/32)*4 — the mask term of the
         # perfmodel traffic formula, matching memstash accounting (the

@@ -202,7 +202,7 @@ def backward_tile_skip(a: jax.Array, b: jax.Array) -> jax.Array:
 
 
 def _note_skip(op: str, a: jax.Array, b: jax.Array) -> None:
-    if registry.metrics_recording() and not isinstance(a, jax.core.Tracer) \
+    if registry.metrics_active() and not isinstance(a, jax.core.Tracer) \
             and not isinstance(b, jax.core.Tracer):
         registry.note_metric(op, tile_skip=float(backward_tile_skip(a, b)))
 

@@ -108,7 +108,7 @@ def masked_matmul(
     if seed is None:
         seed = jnp.uint32(0)
     kimpl = registry.resolve("masked_matmul", impl)
-    if registry.metrics_recording() and not isinstance(x, jax.core.Tracer) \
+    if registry.metrics_active() and not isinstance(x, jax.core.Tracer) \
             and not isinstance(w, jax.core.Tracer):
         registry.note_metric("masked_matmul",
                              tile_skip=float(tile_skip_fraction(x, w)))

@@ -311,15 +311,31 @@ def kernel_policy(policy=None, /, default: Optional[str] = None, **per_op: str):
 
 # ---------------------------------------------------------------------------
 # Dispatch counters + instrumentation metrics.
+#
+# Both live in the process-wide telemetry MetricsRegistry
+# (repro.telemetry.metrics.default_registry) rather than module-level
+# dicts: one labeled home for every runtime measurement, with explicit
+# snapshot()/reset() isolation (a conftest autouse fixture resets it per
+# test, so counts no longer leak across tests and benchmarks sharing one
+# process).  dispatch_counts()/reset_dispatch_counts() survive as the
+# op-keyed views the dry-run and tests consume.
 # ---------------------------------------------------------------------------
 
-_COUNT_LOCK = threading.Lock()
-_DISPATCH: dict[tuple[str, str], int] = {}
+#: MetricsRegistry family names (the Prometheus-visible spellings).
+DISPATCH_METRIC = "spring_kernel_dispatch_total"
+KERNEL_METRIC_PREFIX = "spring_kernel_"
+
+
+def _metrics_registry():
+    from repro.telemetry.metrics import default_registry
+
+    return default_registry()
 
 
 def _record_dispatch(op: str, name: str) -> None:
-    with _COUNT_LOCK:
-        _DISPATCH[(op, name)] = _DISPATCH.get((op, name), 0) + 1
+    _metrics_registry().inc(
+        DISPATCH_METRIC, op=op, impl=name,
+        help="kernel-registry resolutions per (op, impl)")
 
 
 def dispatch_counts() -> dict[str, dict[str, int]]:
@@ -328,16 +344,18 @@ def dispatch_counts() -> dict[str, dict[str, int]]:
     Counts are *resolutions*: one per eager call, one per trace under jit
     (resolution is trace-time — the compiled program embeds the choice).
     """
+    snap = _metrics_registry().snapshot().get(DISPATCH_METRIC)
     out: dict[str, dict[str, int]] = {}
-    with _COUNT_LOCK:
-        for (op, name), n in _DISPATCH.items():
-            out.setdefault(op, {})[name] = n
+    if snap is None:
+        return out
+    for cell in snap["cells"]:
+        labels = cell["labels"]
+        out.setdefault(labels["op"], {})[labels["impl"]] = int(cell["value"])
     return out
 
 
 def reset_dispatch_counts() -> None:
-    with _COUNT_LOCK:
-        _DISPATCH.clear()
+    _metrics_registry().reset(DISPATCH_METRIC)
 
 
 class _Metrics(threading.local):
@@ -369,10 +387,32 @@ def metrics_recording() -> bool:
     return _METRICS.rows is not None
 
 
+def metrics_active() -> bool:
+    """Should eager hooks compute their host-side scalars?  True inside a
+    ``record_kernel_metrics`` block *or* when a telemetry scope is active
+    — the scalars cost a device read, so they stay gated either way."""
+    if _METRICS.rows is not None:
+        return True
+    from repro import telemetry
+
+    return telemetry.enabled()
+
+
 def note_metric(op: str, **values: float) -> None:
-    if _METRICS.rows is None:
-        return
-    _METRICS.rows.append(dict(values, op=op))
+    """Record one eager instrumentation row.
+
+    Rows flow to the thread-local recorder (the ``record_kernel_metrics``
+    API perfmodel consumes) and, always, into the telemetry
+    MetricsRegistry as labeled histograms
+    (``spring_kernel_<key>{op=...}``) so ``serve --json`` /
+    ``benchmarks/run.py --json`` snapshots carry them.
+    """
+    if _METRICS.rows is not None:
+        _METRICS.rows.append(dict(values, op=op))
+    reg = _metrics_registry()
+    for key, v in values.items():
+        reg.observe(KERNEL_METRIC_PREFIX + key, float(v), op=op,
+                    help=f"eager kernel instrumentation: {key} per op")
 
 
 def metric_summary(rows: list) -> dict[str, dict[str, float]]:

@@ -179,6 +179,35 @@ def serving_table(results: list[dict]) -> str:
             f"| {r['kv_mean_wire_bytes']/1e3:.1f}KB "
             f"| {r['kv_traffic_reduction_vs_fp32']:.2f}x "
             f"| {r.get('spec_hash', '-')[:10]} |")
+    if not any_row:
+        return ""
+    at = latency_attribution_table(results)
+    return "\n".join(lines) + (f"\n\n{at}" if at else "")
+
+
+def latency_attribution_table(results: list[dict]) -> str:
+    """spring-trace latency attribution per engine session: where a
+    request's wall-clock went (queue-wait vs TTFT vs steady-state token
+    cadence) plus scheduler tick utilization — from the engine's
+    streaming quantile sketches (``summary()["latency"]``)."""
+    lines = [
+        "| mode | queue p50/p95 ms | ttft p50/p95 ms | token p50/p95/p99 ms | ticks | tick util | spec |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    any_row = False
+    for r in results:
+        la = r.get("latency")
+        if not r.get("engine") or not la:
+            continue
+        any_row = True
+        q, t, tok = la["queue_s"], la["ttft_s"], la["token_s"]
+        lines.append(
+            f"| {r.get('mode', '-')} "
+            f"| {q['p50']*1e3:.0f}/{q['p95']*1e3:.0f} "
+            f"| {t['p50']*1e3:.0f}/{t['p95']*1e3:.0f} "
+            f"| {tok['p50']*1e3:.1f}/{tok['p95']*1e3:.1f}/{tok['p99']*1e3:.1f} "
+            f"| {la['ticks']} | {la['tick_utilization']:.2f} "
+            f"| {r.get('spec_hash', '-')[:10]} |")
     return "\n".join(lines) if any_row else ""
 
 

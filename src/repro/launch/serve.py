@@ -131,6 +131,15 @@ def main(argv=None):
               f"KV wire {out['kv_mean_wire_bytes']/1e6:.2f}MB/step "
               f"({out['kv_traffic_reduction_vs_fp32']:.2f}x less traffic "
               f"than a dense fp32 pool)")
+        la = out["latency"]
+        print(f"latency attribution: queue p50 {la['queue_s']['p50']*1e3:.0f}ms, "
+              f"ttft p50 {la['ttft_s']['p50']*1e3:.0f}ms, "
+              f"token p50/p95/p99 {la['token_s']['p50']*1e3:.1f}/"
+              f"{la['token_s']['p95']*1e3:.1f}/{la['token_s']['p99']*1e3:.1f}ms, "
+              f"tick utilization {la['tick_utilization']:.2f}")
+    if "telemetry" in out:
+        print(f"telemetry: {out['telemetry']['spans']} spans -> "
+              f"{out['telemetry']['trace_path']} (load in Perfetto)")
     print("sample tokens:", out["generated"][0][:12])
     print(f"spec {out['spec_hash']}")
     if args.json:

@@ -32,10 +32,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.serving import kvpool
 from repro.serving.request import Request, RequestResult
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.steps import make_decode_step, make_prefill_step
+from repro.telemetry.sketch import QuantileSketch
 
 
 class ServingEngine:
@@ -113,6 +115,7 @@ class ServingEngine:
 
         # metrics
         self.decode_steps = 0
+        self.tick = 0  # scheduler ticks (every step() call, incl. admit-only)
         self.prefill_s = 0.0
         self.decode_s = 0.0
         self.occupancy_sum = 0.0
@@ -122,6 +125,13 @@ class ServingEngine:
         self._wire_bytes_sum = 0.0
         self._density_sum = 0.0
         self.finite = True
+        # latency attribution: mergeable quantile sketches, always on
+        # (pure-python adds — a handful of dict ops per tick, invisible
+        # next to a jitted decode step).  Spans/gauges go through the
+        # ambient telemetry scope and cost nothing when it is disabled.
+        self.queue_sketch = QuantileSketch()
+        self.ttft_sketch = QuantileSketch()
+        self.token_sketch = QuantileSketch()
 
     # -- submission ---------------------------------------------------------
 
@@ -136,7 +146,8 @@ class ServingEngine:
         self.sched.submit(req)
         self._requests[req.rid] = req
         self._results[req.rid] = RequestResult(rid=req.rid, tokens=[],
-                                               submit_s=self._now())
+                                               submit_s=self._now(),
+                                               enqueue_tick=self.tick)
         return req.rid
 
     def submit_prompt(self, prompt, max_tokens: int, **kw) -> int:
@@ -157,23 +168,36 @@ class ServingEngine:
         return int(jax.random.categorical(key, row_logits))
 
     def step(self) -> None:
-        for tracker in self.sched.admit():
+        with telemetry.span("serve.tick", tick=self.tick):
+            self._step_body()
+        self.tick += 1
+
+    def _step_body(self) -> None:
+        with telemetry.span("serve.tick.schedule"):
+            admitted = self.sched.admit()
+        for tracker in admitted:
             req = tracker.req
             t0 = time.monotonic()
-            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
-            if req.img_embeds is not None:
-                batch["img_embeds"] = jnp.asarray(req.img_embeds)[None]
-            logits, pcache = self._prefill(
-                self.params, batch, jax.random.PRNGKey(req.seed))
-            self.pool = self._install(self.pool, pcache,
-                                      jnp.asarray(tracker.slot, jnp.int32),
-                                      len(req.prompt))
-            jax.block_until_ready(jax.tree_util.tree_leaves(self.pool)[0])
+            with telemetry.span("serve.tick.prefill", rid=req.rid,
+                                prompt_len=len(req.prompt)):
+                batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+                if req.img_embeds is not None:
+                    batch["img_embeds"] = jnp.asarray(req.img_embeds)[None]
+                logits, pcache = self._prefill(
+                    self.params, batch, jax.random.PRNGKey(req.seed))
+            with telemetry.span("serve.tick.install", rid=req.rid,
+                                slot=tracker.slot):
+                self.pool = self._install(self.pool, pcache,
+                                          jnp.asarray(tracker.slot, jnp.int32),
+                                          len(req.prompt))
+                jax.block_until_ready(jax.tree_util.tree_leaves(self.pool)[0])
             self.prefill_s += time.monotonic() - t0
             # the prefill token is fed, not reported (static-path contract)
             self._next_tok[tracker.slot] = self._sample(tracker, logits[0], 0)
-            self._results[req.rid].admit_s = self._now()
-            self._results[req.rid].slot = tracker.slot
+            res = self._results[req.rid]
+            res.admit_s = self._now()
+            res.slot = tracker.slot
+            self.queue_sketch.add(res.queue_s)
 
         if not self.sched.active:
             return
@@ -181,44 +205,69 @@ class ServingEngine:
         active = np.zeros((self.n_slots,), bool)
         active[active_slots] = True
         t0 = time.monotonic()
-        logits, self.pool = self._decode(
-            self.params, jnp.asarray(self._next_tok, jnp.int32), self.pool,
-            jnp.asarray(active), jax.random.PRNGKey(self.decode_steps))
-        logits = jax.block_until_ready(logits)
-        self.decode_s += time.monotonic() - t0
+        with telemetry.span("serve.tick.decode", active=len(active_slots)):
+            logits, self.pool = self._decode(
+                self.params, jnp.asarray(self._next_tok, jnp.int32), self.pool,
+                jnp.asarray(active), jax.random.PRNGKey(self.decode_steps))
+            logits = jax.block_until_ready(logits)
+        step_s = time.monotonic() - t0
+        self.decode_s += step_s
         self.decode_steps += 1
         self.occupancy_sum += len(active_slots) / self.n_slots
         self.finite &= bool(jnp.all(jnp.isfinite(logits[np.asarray(active_slots)])))
 
-        # greedy argmax is batch-wide: one dispatch for the whole tick
-        # (per-slot device round-trips would serialize the hot loop)
-        greedy_toks = (np.asarray(jnp.argmax(logits, -1))
-                       if self.greedy else None)
-        token_by_slot = {}
-        for slot in active_slots:
-            tracker = self.sched.active[slot]
-            tok = (int(greedy_toks[slot]) if greedy_toks is not None
-                   else self._sample(tracker, logits[slot],
-                                     len(tracker.tokens) + 1))
-            token_by_slot[slot] = tok
-            self._next_tok[slot] = tok
-            res = self._results[tracker.req.rid]
-            if not tracker.tokens:
-                res.first_token_s = self._now()
-        for tracker in self.sched.record_tokens(token_by_slot):
-            res = self._results[tracker.req.rid]
-            res.tokens = list(tracker.tokens)
-            res.done_s = self._now()
-            res.finished_by = tracker.finished_by
-            self.tokens_emitted += len(tracker.tokens)
-            self.pool = self._release(self.pool,
-                                      jnp.asarray(tracker.slot, jnp.int32))
-        stats = kvpool.pool_wire_stats(self.pool)
+        with telemetry.span("serve.tick.sample", active=len(active_slots)):
+            # greedy argmax is batch-wide: one dispatch for the whole tick
+            # (per-slot device round-trips would serialize the hot loop)
+            greedy_toks = (np.asarray(jnp.argmax(logits, -1))
+                           if self.greedy else None)
+            token_by_slot = {}
+            for slot in active_slots:
+                tracker = self.sched.active[slot]
+                tok = (int(greedy_toks[slot]) if greedy_toks is not None
+                       else self._sample(tracker, logits[slot],
+                                         len(tracker.tokens) + 1))
+                token_by_slot[slot] = tok
+                self._next_tok[slot] = tok
+                res = self._results[tracker.req.rid]
+                if not tracker.tokens:
+                    res.first_token_s = self._now()
+                    res.first_token_tick = self.tick
+                    self.ttft_sketch.add(res.first_token_s - res.submit_s)
+                # every active request got one token this tick: attribute
+                # the tick's decode wall time as its per-token latency
+                self.token_sketch.add(step_s)
+        with telemetry.span("serve.tick.repack"):
+            for tracker in self.sched.record_tokens(token_by_slot):
+                res = self._results[tracker.req.rid]
+                res.tokens = list(tracker.tokens)
+                res.done_s = self._now()
+                res.finish_tick = self.tick
+                res.finished_by = tracker.finished_by
+                self.tokens_emitted += len(tracker.tokens)
+                self.pool = self._release(self.pool,
+                                          jnp.asarray(tracker.slot, jnp.int32))
+            stats = kvpool.pool_wire_stats(self.pool)
         if stats["kv_wire_bytes"] >= self.peak_kv_wire_bytes:
             self.peak_kv_wire_bytes = stats["kv_wire_bytes"]
             self._peak_stats = stats
         self._wire_bytes_sum += stats["kv_wire_bytes"]
         self._density_sum += stats["kv_density"]
+        if telemetry.enabled():
+            # tick-level gauges in the one metrics registry (scrapeable /
+            # snapshot into serve --json); disabled path skips the writes
+            m = telemetry.metrics()
+            m.set("spring_serve_tick_utilization",
+                  len(active_slots) / self.n_slots,
+                  help="active slots / pool slots at the last decode tick")
+            m.set("spring_serve_kv_pool_density", stats["kv_density"],
+                  help="measured KV-pool density at the last decode tick")
+            m.set("spring_serve_kv_pool_wire_bytes", stats["kv_wire_bytes"],
+                  help="packed KV-pool wire bytes at the last decode tick")
+            m.inc("spring_serve_tokens_total", len(active_slots),
+                  help="decode tokens emitted")
+            m.observe("spring_serve_decode_step_s", step_s,
+                      help="decode-step wall seconds")
 
     def run(self) -> dict:
         """Drain the queue; returns results + engine metrics."""
@@ -242,6 +291,10 @@ class ServingEngine:
                 "latency_s": r.latency_s,
                 "queue_s": r.queue_s,
                 "ttft_s": r.first_token_s - r.submit_s,
+                "enqueue_tick": r.enqueue_tick,
+                "first_token_tick": r.first_token_tick,
+                "finish_tick": r.finish_tick,
+                "decode_ticks": r.decode_ticks,
                 "finished_by": r.finished_by,
                 "slo_met": r.slo_met(self._requests[r.rid]),
             }
@@ -249,8 +302,20 @@ class ServingEngine:
         ]
         steps = max(self.decode_steps, 1)
         mean_wire = self._wire_bytes_sum / steps
+        # latency attribution: queue-wait / TTFT / per-token percentiles
+        # from the engine's always-on streaming sketches (DESIGN.md §11)
+        latency = {
+            "queue_s": self.queue_sketch.percentiles(),
+            "ttft_s": self.ttft_sketch.percentiles(),
+            "token_s": self.token_sketch.percentiles(),
+            "ticks": self.tick,
+            # fraction of scheduler ticks that reached a decode dispatch
+            "tick_utilization": (self.decode_steps / self.tick
+                                 if self.tick else 0.0),
+        }
         return {
             "per_request": per_request,
+            "latency": latency,
             # per-step KV traffic: a dense engine re-reads the full
             # allocated pool each decode step at fp32; SPRING's interface
             # moves the packed live bytes + mask (DESIGN.md §9.3)

@@ -43,6 +43,14 @@ class RequestResult:
     admit_s: float = 0.0
     first_token_s: float = 0.0
     done_s: float = 0.0
+    #: scheduler-tick milestones (engine tick counter; -1 = not reached).
+    #: Wall-clock varies run to run, but tick indices are deterministic
+    #: for a given arrival order, so latency *structure* (how many ticks
+    #: a request queued, how long it decoded) is recoverable from any
+    #: saved artifact.
+    enqueue_tick: int = -1
+    first_token_tick: int = -1
+    finish_tick: int = -1
     slot: int = -1
     finished_by: str = "max_tokens"  # "eos" | "max_tokens"
 
@@ -53,6 +61,13 @@ class RequestResult:
     @property
     def queue_s(self) -> float:
         return self.admit_s - self.submit_s
+
+    @property
+    def decode_ticks(self) -> int:
+        """Ticks spent decoding (first token -> finish), -1 if unfinished."""
+        if self.first_token_tick < 0 or self.finish_tick < 0:
+            return -1
+        return self.finish_tick - self.first_token_tick + 1
 
     def slo_met(self, req: Request) -> Optional[bool]:
         if req.slo_ms is None:

@@ -6,6 +6,7 @@ fallback shim (tests/_hypothesis_fallback.py) is installed so the property
 tests still run instead of aborting collection."""
 
 import jax
+import pytest
 
 try:
     from hypothesis import HealthCheck, settings
@@ -49,3 +50,27 @@ def pytest_configure(config):
         "spec: RunSpec round-trip/parity/coverage suite "
         "(CI spec job runs `pytest -m spec`)",
     )
+    config.addinivalue_line(
+        "markers",
+        "telemetry: spring-trace metrics/span/latency-attribution suite "
+        "(CI telemetry job runs `pytest -m telemetry`)",
+    )
+
+
+@pytest.fixture(autouse=True)
+def _isolate_metrics():
+    """Snapshot/restore the default MetricsRegistry around every test.
+
+    The registry now backs the kernel dispatch counters (global mutable
+    state by design — it outlives any one run), so without isolation a
+    test's asserts would see whatever counts earlier tests dispatched.
+    """
+    from repro.telemetry import default_registry
+
+    reg = default_registry()
+    saved = reg.snapshot()
+    try:
+        yield reg
+    finally:
+        reg.reset()
+        reg.restore(saved)
