@@ -159,9 +159,13 @@ class MetricsRegistry:
                 self._families.pop(name, None)
 
     def restore(self, snap: dict) -> None:
-        """Load a ``snapshot()`` payload back into the live registry
-        (merging into current state; conftest pairs it with ``reset()``
-        to give every test the registry exactly as it found it)."""
+        """Load a ``snapshot()`` payload back into the live registry.
+
+        Cells present in the snapshot *overwrite* live cells of the same
+        name/labels (counters are assigned, not added; histogram sketches
+        are replaced wholesale) — this is not a merge.  Intended to follow
+        ``reset()``, as the conftest isolation fixture does, to put the
+        registry back exactly as a prior snapshot saw it."""
         with self._lock:
             for name in snap:
                 fam_snap = snap[name]

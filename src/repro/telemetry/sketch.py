@@ -8,10 +8,12 @@ deterministic result.  The sketch is a two-phase hybrid:
   * **exact phase** — up to ``max_exact`` samples are kept verbatim, so
     small runs (every test, every smoke bench) report exact quantiles;
   * **bucketed phase** — past that, samples collapse into DDSketch-style
-    logarithmic buckets: index ``ceil(log_gamma |x|)`` with
-    ``gamma = (1 + alpha) / (1 - alpha)``, which bounds the *relative*
-    error of any quantile estimate by ``alpha`` (the bucket midpoint is
-    within ``alpha`` of every value the bucket holds).
+    logarithmic buckets: magnitude index ``ceil(log_gamma |x|)`` with
+    ``gamma = (1 + alpha) / (1 - alpha)``, held in separate stores per
+    sign (the magnitude index is itself negative for ``|x| < 1``, so
+    sign must be carried by the store, not the index).  This bounds the
+    *relative* error of any quantile estimate by ``alpha`` (the bucket
+    midpoint is within ``alpha`` of every value the bucket holds).
 
 Merging is associative and commutative by construction: bucket
 assignment is a pure per-value function (independent of arrival or merge
@@ -43,7 +45,7 @@ class QuantileSketch:
     error beyond.  Tracks count/sum/min/max exactly in both phases."""
 
     __slots__ = ("alpha", "max_exact", "_gamma", "_log_gamma", "_exact",
-                 "_buckets", "_zero", "count", "sum", "min", "max")
+                 "_pos", "_neg", "_zero", "count", "sum", "min", "max")
 
     def __init__(self, alpha: float = DEFAULT_ALPHA,
                  max_exact: int = DEFAULT_MAX_EXACT):
@@ -56,9 +58,13 @@ class QuantileSketch:
         self._gamma = (1.0 + alpha) / (1.0 - alpha)
         self._log_gamma = math.log(self._gamma)
         self._exact: Optional[list] = []  # None once bucketed
-        #: {index: count}; negative values use the mirrored index space
-        #: (-1 - bucket(|x|)) so one dict holds both signs.
-        self._buckets: dict[int, int] = {}
+        #: Separate per-sign stores keyed by the *magnitude* index
+        #: ``ceil(log_gamma |x|)`` (standard DDSketch layout).  A single
+        #: sign-mirrored dict would collide: ``|x| < 1`` has a negative
+        #: magnitude index, which a mirror scheme confuses with the
+        #: opposite sign.
+        self._pos: dict[int, int] = {}
+        self._neg: dict[int, int] = {}
         self._zero = 0  # exact zeros (log-bucket index is undefined at 0)
         self.count = 0
         self.sum = 0.0
@@ -84,18 +90,21 @@ class QuantileSketch:
         else:
             self._bucket_add(x, 1)
 
-    def _index(self, x: float) -> int:
-        """Deterministic bucket index for nonzero ``x`` (sign-mirrored)."""
-        if x > 0.0:
-            return math.ceil(math.log(x) / self._log_gamma)
-        return -1 - math.ceil(math.log(-x) / self._log_gamma)
+    def _index(self, mag: float) -> int:
+        """Deterministic bucket index for a *magnitude* ``mag > 0``.
+        Negative for ``mag < 1`` — which is why the two signs live in
+        separate stores rather than a mirrored index space."""
+        return math.ceil(math.log(mag) / self._log_gamma)
 
     def _bucket_add(self, x: float, n: int) -> None:
         if x == 0.0:
             self._zero += n
-        else:
+        elif x > 0.0:
             i = self._index(x)
-            self._buckets[i] = self._buckets.get(i, 0) + n
+            self._pos[i] = self._pos.get(i, 0) + n
+        else:
+            i = self._index(-x)
+            self._neg[i] = self._neg.get(i, 0) + n
 
     def _collapse(self) -> None:
         """Exact -> bucketed; per-value and order-independent, so any
@@ -134,8 +143,10 @@ class QuantileSketch:
                     out._bucket_add(v, 1)
             else:
                 out._zero += src._zero
-                for i, n in src._buckets.items():
-                    out._buckets[i] = out._buckets.get(i, 0) + n
+                for store, src_store in ((out._pos, src._pos),
+                                         (out._neg, src._neg)):
+                    for i, n in src_store.items():
+                        store[i] = store.get(i, 0) + n
         return out
 
     def update(self, values: Iterable[float]) -> "QuantileSketch":
@@ -154,11 +165,11 @@ class QuantileSketch:
         return self._exact is not None
 
     def _representative(self, i: int) -> float:
-        """Bucket midpoint: within ``alpha`` relative error of every value
-        the bucket holds (2*g^i/(g+1) for the (g^(i-1), g^i] bucket)."""
-        if i >= 0:
-            return 2.0 * self._gamma ** i / (self._gamma + 1.0)
-        return -2.0 * self._gamma ** (-1 - i) / (self._gamma + 1.0)
+        """Positive bucket midpoint for magnitude index ``i``: within
+        ``alpha`` relative error of every magnitude the bucket holds
+        (2*g^i/(g+1) for the (g^(i-1), g^i] bucket).  Callers apply the
+        sign of the store the bucket came from."""
+        return 2.0 * self._gamma ** i / (self._gamma + 1.0)
 
     def quantile(self, q: float) -> float:
         """Value at quantile ``q`` in [0, 1] (nearest-rank definition:
@@ -170,18 +181,18 @@ class QuantileSketch:
         rank = max(1, math.ceil(q * self.count))  # 1-based target rank
         if self._exact is not None:
             return sorted(self._exact)[rank - 1]
-        # ordered sweep: negative buckets (most negative first), zeros,
-        # then positive buckets
+        # ordered sweep: negative buckets (largest magnitude = most
+        # negative first), zeros, then positive buckets (smallest first)
         seen = 0
-        for i in sorted((i for i in self._buckets if i < 0), reverse=True):
-            seen += self._buckets[i]
+        for i in sorted(self._neg, reverse=True):
+            seen += self._neg[i]
             if seen >= rank:
-                return self._clamp(self._representative(i))
+                return self._clamp(-self._representative(i))
         seen += self._zero
         if seen >= rank:
             return 0.0
-        for i in sorted(i for i in self._buckets if i >= 0):
-            seen += self._buckets[i]
+        for i in sorted(self._pos):
+            seen += self._pos[i]
             if seen >= rank:
                 return self._clamp(self._representative(i))
         return self.max  # numeric-edge fallback; unreachable in practice
@@ -210,7 +221,8 @@ class QuantileSketch:
             d["exact"] = list(self._exact)
         else:
             d["zero"] = self._zero
-            d["buckets"] = {str(i): n for i, n in sorted(self._buckets.items())}
+            d["pos"] = {str(i): n for i, n in sorted(self._pos.items())}
+            d["neg"] = {str(i): n for i, n in sorted(self._neg.items())}
         return d
 
     @classmethod
@@ -225,8 +237,8 @@ class QuantileSketch:
         else:
             out._exact = None
             out._zero = int(d.get("zero", 0))
-            out._buckets = {int(i): int(n)
-                            for i, n in d.get("buckets", {}).items()}
+            out._pos = {int(i): int(n) for i, n in d.get("pos", {}).items()}
+            out._neg = {int(i): int(n) for i, n in d.get("neg", {}).items()}
         return out
 
     # -- canonical equality (the associativity seal compares these) ---------
@@ -234,7 +246,8 @@ class QuantileSketch:
     def _canonical(self) -> tuple:
         if self._exact is not None:
             return ("exact", tuple(sorted(self._exact)))
-        return ("buckets", self._zero, tuple(sorted(self._buckets.items())))
+        return ("buckets", self._zero, tuple(sorted(self._pos.items())),
+                tuple(sorted(self._neg.items())))
 
     def __eq__(self, other) -> bool:
         if not isinstance(other, QuantileSketch):

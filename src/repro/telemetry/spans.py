@@ -11,7 +11,8 @@ Overhead contract (DESIGN.md §11): when tracing is disabled — the
 default — ``span()`` is one attribute load, one truthiness test, and the
 return of a shared no-op context manager.  No object allocation, no
 timestamp read, no lock.  The enabled path takes two ``monotonic_ns``
-reads and one list append per span; there is deliberately no jax work
+reads and one list append per span (plus one lock-guarded sampling
+accumulator update per root span); there is deliberately no jax work
 and no device sync inside the tracer, so enabling it cannot perturb
 numerics (the on/off parity seal in tests/test_telemetry.py).
 
@@ -105,10 +106,11 @@ class SpanTracer:
         if not self.enabled:
             return _NULL
         if self._depth.value == 0:  # root: one sampling decision per tree
-            self._acc += self.sample_rate
-            sampled = self._acc >= 1.0
-            if sampled:
-                self._acc -= 1.0
+            with self._lock:  # _acc is shared across threads' root spans
+                self._acc += self.sample_rate
+                sampled = self._acc >= 1.0
+                if sampled:
+                    self._acc -= 1.0
             self._depth.root_sampled = sampled
         # unsampled spans still track depth (a _NULL here would make the
         # dropped root's children look like fresh roots and re-roll the
@@ -154,7 +156,7 @@ class SpanTracer:
     def clear(self) -> None:
         with self._lock:
             self._events.clear()
-        self._acc = 0.0
+            self._acc = 0.0
 
     def to_chrome_trace(self, extra_metadata: Optional[dict] = None) -> dict:
         """The Chrome trace-event JSON object (Perfetto-loadable)."""

@@ -11,6 +11,7 @@ real hypothesis installed this module is never imported (see conftest.py).
 
 from __future__ import annotations
 
+import math
 import random
 import sys
 import types
@@ -30,10 +31,40 @@ def integers(min_value: int, max_value: int) -> _Strategy:
     return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
 
+#: Smallest magnitude the log-uniform float draw reaches down to.
+_TINY = 1e-12
+
+
 def floats(min_value: float, max_value: float, allow_nan: bool = False,
            allow_infinity: bool = False) -> _Strategy:
     del allow_nan, allow_infinity  # bounded draws are always finite
-    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def draw(rng: random.Random) -> float:
+        if min_value == max_value:
+            return min_value
+        # Mostly log-uniform in magnitude: a plain uniform draw over a
+        # wide range essentially never yields small magnitudes (over
+        # [1e-3, 1e6] the sub-1.0 regime — real latencies in seconds —
+        # has probability ~1e-6 per draw), so log spacing covers every
+        # decade.  A uniform slice is kept for boundary/large coverage.
+        if rng.random() < 0.25:
+            return rng.uniform(min_value, max_value)
+        hi = max(abs(min_value), abs(max_value))
+        if hi <= 0.0:
+            return 0.0
+        lo = (min(abs(min_value), abs(max_value))
+              if (min_value > 0.0 or max_value < 0.0) else _TINY)
+        lo = max(lo, _TINY)
+        mag = math.exp(rng.uniform(math.log(lo), math.log(hi)))
+        if min_value >= 0.0:
+            x = mag
+        elif max_value <= 0.0:
+            x = -mag
+        else:
+            x = mag if rng.random() < 0.5 else -mag
+        return min(max(x, min_value), max_value)
+
+    return _Strategy(draw)
 
 
 def sampled_from(options) -> _Strategy:

@@ -91,6 +91,32 @@ def test_sketch_relative_error_bound(values, q):
     assert abs(got - true) <= alpha * true + 1e-12
 
 
+def test_sketch_latency_scale_past_exact_phase():
+    """Deterministic regression: sub-1.0 samples (the latency-in-seconds
+    regime the serving engine actually feeds the sketch) past max_exact
+    must honour the alpha relative-error bound.  A sign-mirrored bucket
+    index space collides here — positive values < 1.0 have *negative*
+    magnitude indices — collapsing every percentile to min."""
+    alpha = 0.01
+    n = 1000
+    values = [0.001 + 0.499 * k / (n - 1) for k in range(n)]  # all in (0, 1)
+    sk = _sk(values, alpha=alpha)
+    assert not sk.is_exact
+    for q in (0.5, 0.95, 0.99):
+        rank = max(1, math.ceil(q * n))
+        true = sorted(values)[rank - 1]
+        got = sk.quantile(q)
+        assert abs(got - true) <= alpha * true, (q, got, true)
+    # mixed signs with sub-1.0 magnitudes must order correctly too
+    mixed = [(-1) ** k * (0.01 + 0.9 * k / 399) for k in range(400)]
+    sk2 = _sk(mixed)
+    assert not sk2.is_exact
+    assert sk2.quantile(0.0) == sk2.min < 0 < sk2.max == sk2.quantile(1.0)
+    true_med = sorted(mixed)[math.ceil(0.5 * len(mixed)) - 1]
+    got_med = sk2.quantile(0.5)
+    assert abs(got_med - true_med) <= 0.01 * abs(true_med)
+
+
 @given(st.lists(finite, max_size=200))
 def test_sketch_serialization_roundtrip(values):
     sk = _sk(values)
