@@ -1,0 +1,203 @@
+"""spring-pages benchmark: concurrent capacity of the paged COW KV pool
+vs the slot-monolithic pool at equal physical page bytes.
+
+A heavy-tailed prompt trace (mostly short prompts, a few long, half
+sharing a common prefix) is replayed through both engines:
+
+  * monolithic: ``MONO_SLOTS`` slots x ``MAX_LEN`` rows of packed
+    storage — the physical byte budget;
+  * paged: the *same* physical budget expressed as
+    ``MONO_SLOTS * ceil(MAX_LEN / PAGE_TOKENS)`` pages, density-aware
+    admission overcommitting logical frames against it, prefix blocks
+    shared copy-on-write.
+
+The capacity metric is ``peak_active`` — the most requests concurrently
+resident — which the monolithic pool caps at its slot count while the
+paged pool admits by measured packed bits (a page costs
+``20*density + 1`` bits/elem, so sub-dense traffic packs >1 logical
+page per physical page) and by page-granular allocation (a short prompt
+holds 2 pages, not max_len rows).
+
+Rows (name, us_per_call, derived[, impl]):
+
+  paging.engine.<arch>.peak_active_paged   derived = paged peak residents
+  paging.engine.<arch>.peak_active_mono    derived = monolithic peak
+  paging.engine.<arch>.capacity_x          derived = paged / mono peak —
+                                           the --smoke gate (>= 1.5x)
+  paging.engine.<arch>.tok_s               derived = paged decode tokens/s
+  paging.engine.<arch>.prefix_hits         derived = blocks adopted shared
+  paging.engine.<arch>.cow_copies          derived = COW page forks
+  paging.engine.<arch>.spills              derived = spill/resume round trips
+  paging.engine.<arch>.page_utilization    derived = peak live bits /
+                                           physical budget
+
+``--smoke`` (the CI paging job) additionally asserts the paged tokens
+are bit-identical to the monolithic pool's, everything finite, and no
+page leaked at drain.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax
+
+ARCH = "llama3.2-1b"
+MODE = "quant_sparse"
+PAGE_TOKENS = 8
+MONO_SLOTS = 2
+MAX_LEN = 48
+GEN = 5
+#: equal physical bytes: the monolithic pool's dense-equivalent page count
+NUM_PAGES = MONO_SLOTS * (MAX_LEN // PAGE_TOKENS)
+PAGED_SLOTS = 8
+OVERCOMMIT = 2.0
+#: heavy-tailed prompt lengths; even indices share an 8-token prefix
+TRACE_LENS = (6, 7, 6, 9, 30, 6, 8, 7, 6, 22)
+
+#: Canonical RunSpec surface for benchmarks/run.py --json.
+SPEC_RUN = "serve"
+SPEC_OVERRIDES = {
+    "arch.id": ARCH,
+    "numerics.mode": MODE,
+    "shape.gen": GEN,
+    "serving.slots": PAGED_SLOTS,
+    "serving.queue": len(TRACE_LENS),
+    "serving.pages": True,
+    "serving.page_tokens": PAGE_TOKENS,
+    "serving.num_pages": NUM_PAGES,
+    "serving.overcommit": OVERCOMMIT,
+}
+
+_SETUP = None
+
+
+def _setup():
+    """Model + trace, built once per process (both engines replay it)."""
+    global _SETUP
+    if _SETUP is not None:
+        return _SETUP
+    from repro.configs import get_arch
+    from repro.launch.serve import serving_config
+    from repro.models.lm import lm_init
+    from repro.optim.optimizers import OptimizerConfig
+    from repro.runtime.train import StepConfig
+
+    view = get_arch(ARCH).view(reduced=True)
+    step_cfg = StepConfig(spring=serving_config(MODE),
+                          optimizer=OptimizerConfig())
+    params = lm_init(jax.random.PRNGKey(0), view.config)
+    key = jax.random.PRNGKey(11)
+    vocab = view.config.vocab
+    prefix = [int(t) for t in
+              jax.random.randint(jax.random.fold_in(key, 999), (8,), 0, vocab)]
+    prompts = []
+    for i, n in enumerate(TRACE_LENS):
+        toks = [int(t) for t in
+                jax.random.randint(jax.random.fold_in(key, i), (n,), 0, vocab)]
+        if i % 2 == 0:  # the shared-prefix mix
+            toks = (prefix + toks)[:max(n, len(prefix) + 1)]
+        prompts.append(toks)
+    _SETUP = (view, step_cfg, params, prompts)
+    return _SETUP
+
+
+def _replay(paged: bool) -> dict:
+    from repro.serving.engine import ServingEngine
+    from repro.serving.paging import PagedServingEngine
+
+    view, step_cfg, params, prompts = _setup()
+    if paged:
+        eng = PagedServingEngine(
+            view, step_cfg, params=params, n_slots=PAGED_SLOTS,
+            max_len=MAX_LEN, page_tokens=PAGE_TOKENS, num_pages=NUM_PAGES,
+            overcommit=OVERCOMMIT)
+    else:
+        eng = ServingEngine(view, step_cfg, params=params,
+                            n_slots=MONO_SLOTS, max_len=MAX_LEN)
+    for i, p in enumerate(prompts):
+        eng.submit_prompt(p, GEN, seed=100 + i)
+    out = eng.run()
+    out["_engine"] = eng
+    return out
+
+
+def _measure() -> tuple[list[tuple], dict, dict]:
+    from repro.kernels import registry
+
+    mono = _replay(paged=False)
+    paged = _replay(paged=True)
+    impl = registry.resolve("kv_pack", _count=False).name
+    pg = paged["paging"]
+    step_us = paged["decode_s"] / max(paged["decode_steps"], 1) * 1e6
+    mono_us = mono["decode_s"] / max(mono["decode_steps"], 1) * 1e6
+    ratio = pg["peak_active"] / max(mono["peak_active"], 1)
+    rows = [
+        (f"paging.engine.{ARCH}.peak_active_paged", step_us,
+         pg["peak_active"], impl),
+        (f"paging.engine.{ARCH}.peak_active_mono", mono_us,
+         mono["peak_active"], impl),
+        (f"paging.engine.{ARCH}.capacity_x", step_us, ratio, impl),
+        (f"paging.engine.{ARCH}.tok_s", step_us, paged["tokens_per_s"], impl),
+        (f"paging.engine.{ARCH}.prefix_hits", step_us, pg["prefix_hits"], impl),
+        (f"paging.engine.{ARCH}.cow_copies", step_us, pg["cow_copies"], impl),
+        (f"paging.engine.{ARCH}.spills", step_us, pg["spills"], impl),
+        (f"paging.engine.{ARCH}.page_utilization", step_us,
+         pg["peak_page_utilization"], impl),
+    ]
+    return rows, mono, paged
+
+
+def rows() -> list[tuple]:
+    return _measure()[0]
+
+
+def smoke() -> int:
+    """CI gate: at equal physical page bytes the paged pool must hold
+    >= 1.5x the monolithic pool's concurrent requests, bit-identically."""
+    import numpy as np
+
+    bench_rows, mono, paged = _measure()
+    pg = paged["paging"]
+    failures = []
+    if not (mono["finite"] and paged["finite"]):
+        failures.append("non-finite decode logits")
+    ratio = pg["peak_active"] / max(mono["peak_active"], 1)
+    if ratio < 1.5:
+        failures.append(
+            f"paged concurrency {pg['peak_active']} vs monolithic "
+            f"{mono['peak_active']} = {ratio:.2f}x < 1.5x at equal "
+            f"physical bytes ({NUM_PAGES} pages x {PAGE_TOKENS} tokens)")
+    mono_toks = {r["rid"]: r["tokens"] for r in mono["per_request"]}
+    paged_toks = {r["rid"]: r["tokens"] for r in paged["per_request"]}
+    if mono_toks != paged_toks:
+        bad = [rid for rid in mono_toks if mono_toks[rid] != paged_toks.get(rid)]
+        failures.append(f"paged tokens diverged from monolithic: rids {bad}")
+    eng = paged["_engine"]
+    if eng.alloc.n_allocated != 0:
+        failures.append(f"page leak: {eng.alloc.n_allocated} frames live "
+                        f"after drain")
+    if pg["resumes"] != pg["spills"]:
+        failures.append(f"{pg['spills']} spills but {pg['resumes']} resumes")
+    if pg["prefix_hits"] < 1:
+        failures.append("shared-prefix trace produced no prefix-cache hits")
+    if not np.isfinite(pg["peak_page_utilization"]):
+        failures.append("non-finite page utilization")
+    print("name,us_per_call,derived,impl")
+    for name, us, derived, impl in bench_rows:
+        print(f"{name},{us:.2f},{derived:.6g},{impl}")
+    for f in failures:
+        print(f"PAGING SMOKE FAILURE: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main() -> None:
+    if "--smoke" in sys.argv:
+        sys.exit(smoke())
+    print("name,us_per_call,derived,impl")
+    for name, us, derived, impl in rows():
+        print(f"{name},{us:.2f},{derived:.6g},{impl}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,9 @@
   bench_memstash      compressed activation stash: ratio/throughput vs
                       sparsity + formula cross-check + grad overhead
   bench_kernels       kernel-registry-dispatched microbenches
+  bench_serving       continuous-batching engine throughput + KV wire
+  bench_paging        spring-pages concurrent capacity vs the monolithic
+                      pool at equal physical page bytes
   bench_sr_training   §6 / Gupta'15 SR-vs-fp32 convergence claim
 
 Run: PYTHONPATH=src python -m benchmarks.run [--skip-slow] [--json PATH]
@@ -45,6 +48,7 @@ def main() -> None:
         bench_compression,
         bench_kernels,
         bench_memstash,
+        bench_paging,
         bench_paper_figs,
         bench_serving,
         bench_sr_training,
@@ -52,7 +56,7 @@ def main() -> None:
     )
 
     suites = [bench_table1, bench_paper_figs, bench_compression, bench_memstash,
-              bench_kernels, bench_serving]
+              bench_kernels, bench_serving, bench_paging]
     if not skip_slow:
         suites.append(bench_sr_training)
 
@@ -125,12 +129,31 @@ def main() -> None:
             "mean_occupancy": by_name.get(
                 f"serving.engine.{ARCH_SERVE}.occupancy"),
         }
+        # spring-pages attribution: concurrent-capacity ratio of the
+        # paged COW pool vs the monolithic pool at equal physical bytes
+        from benchmarks.bench_paging import ARCH as ARCH_PAGE
+
+        paging = {
+            "peak_active_paged": by_name.get(
+                f"paging.engine.{ARCH_PAGE}.peak_active_paged"),
+            "peak_active_monolithic": by_name.get(
+                f"paging.engine.{ARCH_PAGE}.peak_active_mono"),
+            "capacity_x": by_name.get(f"paging.engine.{ARCH_PAGE}.capacity_x"),
+            "prefix_hits": by_name.get(
+                f"paging.engine.{ARCH_PAGE}.prefix_hits"),
+            "cow_copies": by_name.get(
+                f"paging.engine.{ARCH_PAGE}.cow_copies"),
+            "spills": by_name.get(f"paging.engine.{ARCH_PAGE}.spills"),
+            "peak_page_utilization": by_name.get(
+                f"paging.engine.{ARCH_PAGE}.page_utilization"),
+        }
         payload = {
             "backend": jax.default_backend(),
             "kernel_policy": registry.current_policy().describe(),
             "kernel_impls": registry.resolution_table(),
             "backward_tile_skip": backward_skip,
             "serving": serving,
+            "paging": paging,
             # per-suite canonical RunSpec + hash: ties every BENCH row
             # (via its spec_hash) to the exact configuration it measured
             "suites": {

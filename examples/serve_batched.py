@@ -34,6 +34,10 @@ FLAGS = (
     flag("--greedy", "serving.greedy", const=True, dest="legacy_greedy"),
     flag("--sample", "serving.greedy", const=False, dest="legacy_greedy"),
     flag("--seed", "seeds.seed", type=int),
+    flag("--pages", "serving.pages", const=True),
+    flag("--page-tokens", "serving.page_tokens", type=int),
+    flag("--prefix-cache", "serving.prefix_cache", type=lambda s: s.lower()
+         not in ("0", "false", "no", "off")),
 )
 
 
@@ -65,6 +69,12 @@ def main(argv: list | None = None):
               f"p100 {lat[-1]*1e3:.0f} ms  occupancy {out['mean_occupancy']:.2f}")
         print(f"  kv:      {out['kv_mean_wire_bytes']/1e3:.1f} KB/step wire, "
               f"{out['kv_traffic_reduction_vs_fp32']:.2f}x less than dense fp32")
+        if out.get("paging"):
+            p = out["paging"]
+            print(f"  pages:   {p['num_pages']} x {p['page_tokens']} tok "
+                  f"(x{p['overcommit']:.1f} logical)  "
+                  f"prefix hits {p['prefix_hits']}  cow {p['cow_copies']}  "
+                  f"spills {p['spills']}")
         for r in out["per_request"]:
             print(f"  req {r['rid']:>3}: queue {r['queue_s']*1e3:6.1f} ms  "
                   f"ttft {r['ttft_s']*1e3:6.1f} ms  "

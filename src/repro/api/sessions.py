@@ -631,7 +631,11 @@ def serve_spec(arch_id: str = "llama3.2-1b", *, reduced: bool = True,
                mode: str = "dense", kernel_impl: Optional[str] = None,
                greedy: bool = True, seed: int = 0,
                slots: Optional[int] = None, queue: Optional[int] = None,
-               static: bool = False) -> RunSpec:
+               static: bool = False, pages: bool = False,
+               page_tokens: Optional[int] = None,
+               num_pages: Optional[int] = None,
+               overcommit: Optional[float] = None,
+               prefix_cache: Optional[bool] = None) -> RunSpec:
     """RunSpec equivalent of the legacy ``serve_session`` surface."""
     over = _call_overrides([
         ("arch.id", arch_id), ("arch.reduced", reduced),
@@ -639,6 +643,7 @@ def serve_spec(arch_id: str = "llama3.2-1b", *, reduced: bool = True,
         ("shape.gen", gen), ("numerics.mode", mode),
         ("kernels.policy", kernel_impl), ("serving.greedy", greedy),
         ("seeds.seed", seed), ("serving.static", static),
+        ("serving.pages", pages),
     ])
     # slots/queue: None means "default to batch" and must stay None in the
     # spec (an explicit 0 must reach the engine's own validation)
@@ -646,6 +651,12 @@ def serve_spec(arch_id: str = "llama3.2-1b", *, reduced: bool = True,
         over.append(("serving.slots", slots, "call:serving.slots"))
     if queue is not None:
         over.append(("serving.queue", queue, "call:serving.queue"))
+    # paged-pool knobs: None keeps the spec default
+    for key, value in (("page_tokens", page_tokens), ("num_pages", num_pages),
+                       ("overcommit", overcommit),
+                       ("prefix_cache", prefix_cache)):
+        if value is not None:
+            over.append((f"serving.{key}", value, f"call:serving.{key}"))
     return build_spec("serve", overrides=over)
 
 

@@ -188,6 +188,12 @@ class ServingSection:
     greedy: bool = True
     static: bool = False  # force the pre-engine static reference path
     int8_cache: bool = False
+    # spring-pages (DESIGN.md §12): paged COW KV pool
+    pages: bool = False  # serve on the paged pool instead of slot-monolithic
+    page_tokens: int = 8  # cache rows per page frame
+    num_pages: Optional[int] = None  # physical page budget; None = dense-equiv
+    overcommit: float = 1.5  # logical frames / physical pages
+    prefix_cache: bool = True  # chain-hash prefix sharing (COW)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -428,6 +434,12 @@ class RunSpec:
             raise SpecError("sparsity.probe_density must be in [0, 1]")
         if not 0.0 < self.telemetry.sample_rate <= 1.0:
             raise SpecError("telemetry.sample_rate must be in (0, 1]")
+        if self.serving.page_tokens < 1:
+            raise SpecError("serving.page_tokens must be >= 1")
+        if self.serving.overcommit < 1.0:
+            raise SpecError("serving.overcommit must be >= 1.0")
+        if self.serving.num_pages is not None and self.serving.num_pages < 1:
+            raise SpecError("serving.num_pages must be >= 1 (or null)")
         try:
             KernelPolicy.parse(self._kernel_spec())
         except ValueError as e:

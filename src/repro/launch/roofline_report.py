@@ -181,8 +181,39 @@ def serving_table(results: list[dict]) -> str:
             f"| {r.get('spec_hash', '-')[:10]} |")
     if not any_row:
         return ""
+    out = "\n".join(lines)
     at = latency_attribution_table(results)
-    return "\n".join(lines) + (f"\n\n{at}" if at else "")
+    if at:
+        out += f"\n\n{at}"
+    pt = paging_table(results)
+    if pt:
+        out += f"\n\n{pt}"
+    return out
+
+
+def paging_table(results: list[dict]) -> str:
+    """spring-pages sessions per ``serve --json``: the paged COW pool's
+    physical budget, peak residency, prefix sharing and spill traffic
+    (``summary()["paging"]``; non-paged sessions are skipped)."""
+    lines = [
+        "| mode | pages | overcommit | peak resident | prefix hits | cow | spills/resumes | peak util | spec |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    any_row = False
+    for r in results:
+        p = r.get("paging")
+        if not r.get("engine") or not p:
+            continue
+        any_row = True
+        lines.append(
+            f"| {r.get('mode', '-')} "
+            f"| {p['num_pages']}x{p['page_tokens']}tok "
+            f"| x{p['overcommit']:.1f} ({p['logical_frames']} logical) "
+            f"| {p['peak_active']} | {p['prefix_hits']} | {p['cow_copies']} "
+            f"| {p['spills']}/{p['resumes']} "
+            f"| {p['peak_page_utilization']:.2f} "
+            f"| {r.get('spec_hash', '-')[:10]} |")
+    return "\n".join(lines) if any_row else ""
 
 
 def latency_attribution_table(results: list[dict]) -> str:

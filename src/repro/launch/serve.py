@@ -42,6 +42,10 @@ LEGACY_FLAGS = (
     flag("--sample", "serving.greedy", const=False, dest="legacy_greedy"),
     flag("--seed", "seeds.seed", type=int),
     flag("--static", "serving.static", const=True),
+    flag("--pages", "serving.pages", const=True),
+    flag("--page-tokens", "serving.page_tokens", type=int),
+    flag("--prefix-cache", "serving.prefix_cache", type=lambda s: s.lower()
+         not in ("0", "false", "no", "off")),
 )
 
 
@@ -94,16 +98,24 @@ def serve_session(
     seed: int = 0,
     slots: int | None = None,
     queue: int | None = None,
+    pages: bool = False,
+    page_tokens: int | None = None,
+    num_pages: int | None = None,
+    overcommit: float | None = None,
+    prefix_cache: bool | None = None,
     mesh=None,
 ) -> dict:
     """One-shot engine session: submit ``queue`` synthetic requests
     (default ``batch``) over a pool of ``slots`` slots (default ``batch``)
-    and drain.  Returns the legacy result surface plus the engine metrics
-    and the canonical resolved spec."""
+    and drain.  ``pages=True`` serves on the paged COW pool (spring-pages).
+    Returns the legacy result surface plus the engine metrics and the
+    canonical resolved spec."""
     spec = serve_spec(arch_id, reduced=reduced, batch=batch,
                       prompt_len=prompt_len, gen=gen, mode=mode,
                       kernel_impl=kernel_impl, greedy=greedy, seed=seed,
-                      slots=slots, queue=queue)
+                      slots=slots, queue=queue, pages=pages,
+                      page_tokens=page_tokens, num_pages=num_pages,
+                      overcommit=overcommit, prefix_cache=prefix_cache)
     return ServeSession(spec, mesh=mesh).run()
 
 
@@ -137,6 +149,14 @@ def main(argv=None):
               f"token p50/p95/p99 {la['token_s']['p50']*1e3:.1f}/"
               f"{la['token_s']['p95']*1e3:.1f}/{la['token_s']['p99']*1e3:.1f}ms, "
               f"tick utilization {la['tick_utilization']:.2f}")
+        if out.get("paging"):
+            p = out["paging"]
+            print(f"paging: {p['num_pages']} pages x {p['page_tokens']} tok "
+                  f"(x{p['overcommit']:.1f} logical overcommit), "
+                  f"peak {p['peak_active']} resident, "
+                  f"prefix hits {p['prefix_hits']}, cow {p['cow_copies']}, "
+                  f"spills {p['spills']}/{p['resumes']} resumed, "
+                  f"peak budget utilization {p['peak_page_utilization']:.2f}")
     if "telemetry" in out:
         print(f"telemetry: {out['telemetry']['spans']} spans -> "
               f"{out['telemetry']['trace_path']} (load in Perfetto)")

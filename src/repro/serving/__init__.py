@@ -8,6 +8,9 @@ sparsity-compressed KV cache (DESIGN.md §9).
              binary-mask packed via the kv_pack/kv_unpack registry ops
   steps      prefill/decode step builders shared with the launchers
   engine     ServingEngine — joins the scheduler to the jitted steps
+  paging     spring-pages: paged, copy-on-write KV pool with
+             density-aware admission control (DESIGN.md §12); the
+             engine serves on it when ``serving.pages`` is set
 """
 
 from repro.serving.request import Request, RequestResult  # noqa: F401

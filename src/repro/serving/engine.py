@@ -55,11 +55,21 @@ class ServingEngine:
         ``spec.resolve()`` to avoid resolving twice)."""
         r = resolved if resolved is not None else spec.resolve()
         s = spec.serving
-        return cls(
-            r.view, r.step, params=params,
+        kw = dict(
+            params=params,
             n_slots=spec.shape.batch if s.slots is None else s.slots,
             max_len=spec.shape.prompt_len + spec.shape.gen + 1,
             greedy=s.greedy, mesh=mesh, reduced=False, seed=spec.seeds.seed)
+        if getattr(s, "pages", False) and cls is ServingEngine:
+            # serving.pages flips the backend to the paged COW pool; the
+            # engine contract (submit/step/run/summary) is unchanged
+            from repro.serving.paging.engine import PagedServingEngine
+
+            return PagedServingEngine(
+                r.view, r.step, page_tokens=s.page_tokens,
+                num_pages=s.num_pages, overcommit=s.overcommit,
+                prefix_cache=s.prefix_cache, **kw)
+        return cls(r.view, r.step, **kw)
 
     def __init__(self, arch, step_cfg, *, params=None, n_slots: int = 4,
                  max_len: int = 256, greedy: bool = True, mesh=None,
@@ -85,9 +95,8 @@ class ServingEngine:
         self._kv_pack_impl = registry.resolve_with(pol, "kv_pack").name
         self._kv_unpack_impl = registry.resolve_with(pol, "kv_unpack").name
 
-        self.sched = SlotScheduler(n_slots)
-        self.pool = kvpool.init_pool(self.cfg, n_slots, max_len,
-                                     impl=self._kv_pack_impl)
+        self.sched = self._make_scheduler(n_slots)
+        self._ledger = kvpool.SlotLedger(n_slots)
         self._next_tok = np.zeros((n_slots,), np.int64)
         self._results: dict[int, RequestResult] = {}
         self._requests: dict[int, Request] = {}
@@ -96,22 +105,9 @@ class ServingEngine:
 
         self._prefill = jax.jit(make_prefill_step(arch, step_cfg, mesh=mesh,
                                                   reduced=reduced))
-        decode = make_decode_step(arch, step_cfg, mesh=mesh, reduced=reduced)
-
-        def pooled_decode(params, tokens, pool, active, key):
-            cache = kvpool.unpack_cache(pool, self._kv_unpack_impl)
-            logits, new_cache = decode(params, tokens, cache, key)
-            merged = kvpool.merge_active(new_cache, cache, active)
-            return logits, kvpool.pack_cache(merged, self._kv_pack_impl)
-
-        def install(pool, prefill_cache, slot, prompt_len):
-            # packed splice: only the new slot's blocks are (re)packed
-            return kvpool.install_packed(pool, prefill_cache, slot,
-                                         prompt_len, impl=self._kv_pack_impl)
-
-        self._decode = jax.jit(pooled_decode)
-        self._install = jax.jit(install)
-        self._release = jax.jit(kvpool.release_packed)
+        self._decode_step = make_decode_step(arch, step_cfg, mesh=mesh,
+                                             reduced=reduced)
+        self._build_backend()
 
         # metrics
         self.decode_steps = 0
@@ -132,6 +128,49 @@ class ServingEngine:
         self.queue_sketch = QuantileSketch()
         self.ttft_sketch = QuantileSketch()
         self.token_sketch = QuantileSketch()
+        #: most concurrent resident (installed) requests seen — the
+        #: capacity number bench_paging compares across pool backends
+        self.peak_active = 0
+
+    # -- backend construction (overridden by the paged engine) --------------
+
+    def _make_scheduler(self, n_slots: int) -> SlotScheduler:
+        return SlotScheduler(n_slots)
+
+    def _build_backend(self) -> None:
+        """Build the KV storage + the jitted programs against it.  The
+        base backend is the slot-monolithic packed pool; the paged engine
+        overrides this with the page store while reusing the whole
+        scheduling/sampling/accounting shell."""
+        self.pool = kvpool.init_pool(self.cfg, self.n_slots, self.max_len,
+                                     impl=self._kv_pack_impl)
+        decode = self._decode_step
+
+        def pooled_decode(params, tokens, pool, active, key):
+            cache = kvpool.unpack_cache(pool, self._kv_unpack_impl)
+            logits, new_cache = decode(params, tokens, cache, key)
+            merged = kvpool.merge_active(new_cache, cache, active)
+            return logits, kvpool.pack_cache(merged, self._kv_pack_impl)
+
+        def install(pool, prefill_cache, slot, prompt_len):
+            # packed splice: only the new slot's blocks are (re)packed
+            return kvpool.install_packed(pool, prefill_cache, slot,
+                                         prompt_len, impl=self._kv_pack_impl)
+
+        self._decode = jax.jit(pooled_decode)
+        self._install = jax.jit(install)
+        self._release = jax.jit(kvpool.release_packed)
+
+    def _pool_stats(self) -> dict:
+        """Current wire stats of the live KV storage (one device sync)."""
+        return kvpool.pool_wire_stats(self.pool)
+
+    def release_slot(self, slot: int) -> None:
+        """Free one installed slot.  Double release raises ValueError via
+        the ledger *before* the pure jitted zeroing op runs — silently
+        re-zeroing a free slot used to corrupt occupancy accounting."""
+        self._ledger.release(slot)
+        self.pool = self._release(self.pool, jnp.asarray(slot, jnp.int32))
 
     # -- submission ---------------------------------------------------------
 
@@ -173,56 +212,26 @@ class ServingEngine:
         self.tick += 1
 
     def _step_body(self) -> None:
-        with telemetry.span("serve.tick.schedule"):
-            admitted = self.sched.admit()
-        for tracker in admitted:
-            req = tracker.req
-            t0 = time.monotonic()
-            with telemetry.span("serve.tick.prefill", rid=req.rid,
-                                prompt_len=len(req.prompt)):
-                batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
-                if req.img_embeds is not None:
-                    batch["img_embeds"] = jnp.asarray(req.img_embeds)[None]
-                logits, pcache = self._prefill(
-                    self.params, batch, jax.random.PRNGKey(req.seed))
-            with telemetry.span("serve.tick.install", rid=req.rid,
-                                slot=tracker.slot):
-                self.pool = self._install(self.pool, pcache,
-                                          jnp.asarray(tracker.slot, jnp.int32),
-                                          len(req.prompt))
-                jax.block_until_ready(jax.tree_util.tree_leaves(self.pool)[0])
-            self.prefill_s += time.monotonic() - t0
-            # the prefill token is fed, not reported (static-path contract)
-            self._next_tok[tracker.slot] = self._sample(tracker, logits[0], 0)
-            res = self._results[req.rid]
-            res.admit_s = self._now()
-            res.slot = tracker.slot
-            self.queue_sketch.add(res.queue_s)
-
-        if not self.sched.active:
+        self._admit_phase()
+        self.peak_active = max(self.peak_active, len(self.sched.active))
+        slots = self._decode_slots()
+        if not slots:
             return
-        active_slots = sorted(self.sched.active)
-        active = np.zeros((self.n_slots,), bool)
-        active[active_slots] = True
-        t0 = time.monotonic()
-        with telemetry.span("serve.tick.decode", active=len(active_slots)):
-            logits, self.pool = self._decode(
-                self.params, jnp.asarray(self._next_tok, jnp.int32), self.pool,
-                jnp.asarray(active), jax.random.PRNGKey(self.decode_steps))
-            logits = jax.block_until_ready(logits)
-        step_s = time.monotonic() - t0
+        logits, slots, step_s = self._dispatch_decode(slots)
+        if not slots:
+            return
         self.decode_s += step_s
         self.decode_steps += 1
-        self.occupancy_sum += len(active_slots) / self.n_slots
-        self.finite &= bool(jnp.all(jnp.isfinite(logits[np.asarray(active_slots)])))
+        self.occupancy_sum += len(slots) / self.n_slots
+        self.finite &= bool(jnp.all(jnp.isfinite(logits[np.asarray(slots)])))
 
-        with telemetry.span("serve.tick.sample", active=len(active_slots)):
+        with telemetry.span("serve.tick.sample", active=len(slots)):
             # greedy argmax is batch-wide: one dispatch for the whole tick
             # (per-slot device round-trips would serialize the hot loop)
             greedy_toks = (np.asarray(jnp.argmax(logits, -1))
                            if self.greedy else None)
             token_by_slot = {}
-            for slot in active_slots:
+            for slot in slots:
                 tracker = self.sched.active[slot]
                 tok = (int(greedy_toks[slot]) if greedy_toks is not None
                        else self._sample(tracker, logits[slot],
@@ -234,9 +243,10 @@ class ServingEngine:
                     res.first_token_s = self._now()
                     res.first_token_tick = self.tick
                     self.ttft_sketch.add(res.first_token_s - res.submit_s)
-                # every active request got one token this tick: attribute
+                # every decoded request got one token this tick: attribute
                 # the tick's decode wall time as its per-token latency
                 self.token_sketch.add(step_s)
+        self._post_sample(slots)
         with telemetry.span("serve.tick.repack"):
             for tracker in self.sched.record_tokens(token_by_slot):
                 res = self._results[tracker.req.rid]
@@ -245,9 +255,9 @@ class ServingEngine:
                 res.finish_tick = self.tick
                 res.finished_by = tracker.finished_by
                 self.tokens_emitted += len(tracker.tokens)
-                self.pool = self._release(self.pool,
-                                          jnp.asarray(tracker.slot, jnp.int32))
-            stats = kvpool.pool_wire_stats(self.pool)
+                self.release_slot(tracker.slot)
+            stats = self._pool_stats()
+        self._post_stats(stats)
         if stats["kv_wire_bytes"] >= self.peak_kv_wire_bytes:
             self.peak_kv_wire_bytes = stats["kv_wire_bytes"]
             self._peak_stats = stats
@@ -258,16 +268,80 @@ class ServingEngine:
             # snapshot into serve --json); disabled path skips the writes
             m = telemetry.metrics()
             m.set("spring_serve_tick_utilization",
-                  len(active_slots) / self.n_slots,
+                  len(slots) / self.n_slots,
                   help="active slots / pool slots at the last decode tick")
             m.set("spring_serve_kv_pool_density", stats["kv_density"],
                   help="measured KV-pool density at the last decode tick")
             m.set("spring_serve_kv_pool_wire_bytes", stats["kv_wire_bytes"],
                   help="packed KV-pool wire bytes at the last decode tick")
-            m.inc("spring_serve_tokens_total", len(active_slots),
+            m.inc("spring_serve_tokens_total", len(slots),
                   help="decode tokens emitted")
             m.observe("spring_serve_decode_step_s", step_s,
                       help="decode-step wall seconds")
+            self._backend_gauges(m)
+
+    # -- tick phases (the paged engine overrides the backend-specific ones) --
+
+    def _admit_phase(self) -> None:
+        with telemetry.span("serve.tick.schedule"):
+            admitted = self.sched.admit()
+        for tracker in admitted:
+            self._admit_one(tracker)
+
+    def _admit_one(self, tracker) -> None:
+        req = tracker.req
+        t0 = time.monotonic()
+        with telemetry.span("serve.tick.prefill", rid=req.rid,
+                            prompt_len=len(req.prompt)):
+            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+            if req.img_embeds is not None:
+                batch["img_embeds"] = jnp.asarray(req.img_embeds)[None]
+            logits, pcache = self._prefill(
+                self.params, batch, jax.random.PRNGKey(req.seed))
+        with telemetry.span("serve.tick.install", rid=req.rid,
+                            slot=tracker.slot):
+            self._ledger.install(tracker.slot)
+            self._install_request(tracker, pcache)
+        self.prefill_s += time.monotonic() - t0
+        # the prefill token is fed, not reported (static-path contract)
+        self._next_tok[tracker.slot] = self._sample(tracker, logits[0], 0)
+        res = self._results[req.rid]
+        res.admit_s = self._now()
+        res.slot = tracker.slot
+        self.queue_sketch.add(res.queue_s)
+
+    def _install_request(self, tracker, pcache) -> None:
+        self.pool = self._install(self.pool, pcache,
+                                  jnp.asarray(tracker.slot, jnp.int32),
+                                  len(tracker.req.prompt))
+        jax.block_until_ready(jax.tree_util.tree_leaves(self.pool)[0])
+
+    def _decode_slots(self) -> list:
+        """Slots that take a decode step this tick."""
+        return sorted(self.sched.active)
+
+    def _dispatch_decode(self, slots):
+        """Run the jitted decode over ``slots``; returns ``(logits, slots,
+        step_s)`` — the slot list may shrink (the paged backend can spill
+        a slot while claiming its write page)."""
+        active = np.zeros((self.n_slots,), bool)
+        active[slots] = True
+        t0 = time.monotonic()
+        with telemetry.span("serve.tick.decode", active=len(slots)):
+            logits, self.pool = self._decode(
+                self.params, jnp.asarray(self._next_tok, jnp.int32), self.pool,
+                jnp.asarray(active), jax.random.PRNGKey(self.decode_steps))
+            logits = jax.block_until_ready(logits)
+        return logits, slots, time.monotonic() - t0
+
+    def _post_sample(self, slots) -> None:
+        """Backend hook between sampling and retirement."""
+
+    def _post_stats(self, stats) -> None:
+        """Backend hook after the per-tick pool measurement."""
+
+    def _backend_gauges(self, m) -> None:
+        """Backend-specific telemetry gauges (paged pool occupancy etc.)."""
 
     def run(self) -> dict:
         """Drain the queue; returns results + engine metrics."""
@@ -282,7 +356,7 @@ class ServingEngine:
         results = [self._results[r] for r in sorted(self._results)]
         # headline KV numbers are taken at peak wire occupancy — the pool
         # drains as requests retire, so end-of-run stats under-report
-        stats = self._peak_stats or kvpool.pool_wire_stats(self.pool)
+        stats = self._peak_stats or self._pool_stats()
         per_request = [
             {
                 "rid": r.rid,
@@ -331,6 +405,7 @@ class ServingEngine:
             "mean_occupancy": (self.occupancy_sum / self.decode_steps
                                if self.decode_steps else 0.0),
             "peak_kv_wire_bytes": self.peak_kv_wire_bytes,
+            "peak_active": self.peak_active,
             "finite": self.finite,
             **stats,
         }

@@ -290,6 +290,51 @@ def release_slot(dense_pool: dict, slot) -> dict:
     return jax.tree_util.tree_map_with_path(one, dense_pool)
 
 
+# -- host-side slot accounting ------------------------------------------------
+
+
+class SlotLedger:
+    """Host-side occupancy ledger guarding install/release pairing.
+
+    ``release_packed`` is a pure jitted op: releasing a slot that is
+    already free silently re-zeroes it, and the engine-side bookkeeping
+    built on top (occupancy, density denominators, peak stats) drifts
+    without any visible error.  The ledger makes the pairing explicit —
+    double release (and double install) raise :class:`ValueError` at the
+    call site instead of corrupting pool accounting downstream."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = n_slots
+        self._occupied: set = set()
+
+    @property
+    def occupied(self) -> list:
+        return sorted(self._occupied)
+
+    def _check(self, slot: int) -> int:
+        slot = int(slot)
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range [0, {self.n_slots})")
+        return slot
+
+    def install(self, slot: int) -> None:
+        slot = self._check(slot)
+        if slot in self._occupied:
+            raise ValueError(
+                f"slot {slot} is already installed (released nowhere?)")
+        self._occupied.add(slot)
+
+    def release(self, slot: int) -> None:
+        slot = self._check(slot)
+        if slot not in self._occupied:
+            raise ValueError(
+                f"double release: slot {slot} is not installed (released "
+                f"twice, or never installed)")
+        self._occupied.discard(slot)
+
+
 # -- wire accounting ----------------------------------------------------------
 
 

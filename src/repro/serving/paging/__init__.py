@@ -1,0 +1,33 @@
+"""spring-pages: paged, copy-on-write KV pool with density-aware
+admission control (DESIGN.md §12).
+
+Layers, host side first:
+
+  allocator   free-list frame allocator + per-frame refcounts
+  blocktable  (request, block) -> frame mapping, chain-hash prefix
+              sharing, copy-on-write forks
+  admission   density-aware byte budget (20*d + 1 bits/elem pages)
+  scheduler   FCFS admission gated on page feasibility; spill/resume
+  store       packed page arrays + the jit-able gather/scatter programs
+  engine      PagedServingEngine: the serving engine on pages
+"""
+
+from repro.serving.paging.admission import AdmissionController
+from repro.serving.paging.allocator import PageAllocator, PageError
+from repro.serving.paging.blocktable import BlockTable, chain_keys
+from repro.serving.paging.engine import PagedServingEngine
+from repro.serving.paging.scheduler import PagedScheduler, SpilledRequest
+from repro.serving.paging.store import PagedKVStore, prompt_rows
+
+__all__ = [
+    "AdmissionController",
+    "BlockTable",
+    "PageAllocator",
+    "PageError",
+    "PagedKVStore",
+    "PagedScheduler",
+    "PagedServingEngine",
+    "SpilledRequest",
+    "chain_keys",
+    "prompt_rows",
+]

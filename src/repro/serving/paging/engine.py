@@ -1,0 +1,501 @@
+"""PagedServingEngine: the serving engine on the paged COW KV pool.
+
+Same contract as :class:`repro.serving.engine.ServingEngine` (submit /
+step / run / summary, bit-identical tokens per request) with the
+slot-monolithic pool swapped for fixed-size packed pages:
+
+  * KV rows live in :class:`PagedKVStore` frames; a :class:`BlockTable`
+    maps (request, block) -> frame and shares pure prefix blocks
+    copy-on-write between requests;
+  * prompts install page-by-page (*chunked prefill*): at most
+    ``prefill_chunk`` page writes land per tick engine-wide, so a long
+    prompt never stalls the decode tick of requests already resident —
+    a request decodes once its last page is in;
+  * admission is *density-aware*: logical frames overcommit the physical
+    page budget, and requests are admitted while their pages — costed at
+    the pool's measured packed density — fit the physical bits.  When
+    density rises and live bits exceed the budget, the most recently
+    admitted requests spill: their exact packed page bits move to host
+    memory and resume — bit-identically, by construction — once the pool
+    drains.
+
+Per-tick decode is gather -> compute -> scatter (see ``store.py``); the
+key bit-identity trick is that the *gather* table is captured before the
+write page is claimed, so a COW fork reads the shared frame's content
+while its write-back lands in the private copy — the "copy" is the
+full-page write-back itself.
+"""
+
+from __future__ import annotations
+
+import collections
+import math
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import telemetry
+from repro.serving import kvpool
+from repro.serving.engine import ServingEngine
+from repro.serving.paging.admission import AdmissionController
+from repro.serving.paging.allocator import PageAllocator, PageError
+from repro.serving.paging.blocktable import BlockTable, chain_keys
+from repro.serving.paging.scheduler import PagedScheduler
+from repro.serving.paging.store import PagedKVStore, prompt_rows
+from repro.telemetry.sketch import QuantileSketch
+
+
+def extract_slot_state(state: dict, slot) -> dict:
+    """One slot's dense (non-paged) cache state, for spill payloads."""
+
+    def one(path, leaf):
+        ax = kvpool.slot_axis(path)
+        starts = [0] * leaf.ndim
+        starts[ax] = slot
+        sizes = list(leaf.shape)
+        sizes[ax] = 1
+        return jax.lax.dynamic_slice(leaf, tuple(starts), tuple(sizes))
+
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+def restore_slot_state(state: dict, payload: dict, slot) -> dict:
+    """Inverse of :func:`extract_slot_state` into (possibly another) slot."""
+
+    def one(path, leaf):
+        ax = kvpool.slot_axis(path)
+        p = jnp.asarray(kvpool._lookup(payload, path)).astype(leaf.dtype)
+        starts = [0] * leaf.ndim
+        starts[ax] = slot
+        return jax.lax.dynamic_update_slice(leaf, p, tuple(starts))
+
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+class PagedServingEngine(ServingEngine):
+    """Continuous batching over paged, copy-on-write packed KV storage."""
+
+    def __init__(self, arch, step_cfg, *, page_tokens: int = 8,
+                 num_pages: Optional[int] = None, overcommit: float = 1.5,
+                 prefix_cache: bool = True, prefill_chunk: Optional[int] = 8,
+                 **kw):
+        if page_tokens < 1:
+            raise ValueError(f"page_tokens must be >= 1, got {page_tokens}")
+        if overcommit < 1.0:
+            raise ValueError(f"overcommit must be >= 1.0, got {overcommit}")
+        self.page_tokens = page_tokens
+        self._num_pages_arg = num_pages
+        self.overcommit = overcommit
+        self.prefix_cache = prefix_cache
+        self.prefill_chunk = prefill_chunk
+        super().__init__(arch, step_cfg, **kw)
+
+    # -- backend construction ------------------------------------------------
+
+    def _make_scheduler(self, n_slots: int) -> PagedScheduler:
+        return PagedScheduler(n_slots)
+
+    def _build_backend(self) -> None:
+        pt = self.page_tokens
+        self.max_blocks = -(-self.max_len // pt)
+        # default physical budget: the dense-equivalent of the monolithic
+        # pool (every slot can hold max_len rows with nothing shared)
+        num_pages = (self.n_slots * self.max_blocks
+                     if self._num_pages_arg is None else self._num_pages_arg)
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        logical = int(math.ceil(num_pages * self.overcommit))
+
+        self.store = PagedKVStore(
+            self.cfg, self.n_slots, pt, self.max_blocks,
+            n_frames=PageAllocator.RESERVED + logical,
+            pack_impl=self._kv_pack_impl, unpack_impl=self._kv_unpack_impl)
+        self.alloc = PageAllocator(logical)
+        self.table = BlockTable(self.alloc, pt, prefix_cache=self.prefix_cache)
+        self.admission = AdmissionController(
+            self.store.page_elems, self.store.page_mask_bits, num_pages)
+        self.store_arrays = self.store.init_arrays()
+        self.state = self.store.init_state()
+
+        store, decode = self.store, self._decode_step
+
+        def paged_decode(params, tokens, arrays, state, table, wframe, wblock,
+                         active, key):
+            cache = store.assemble(arrays, state, table)
+            logits, new_cache = decode(params, tokens, cache, key)
+            merged = kvpool.merge_active(new_cache, cache, active)
+            new_arrays = store.writeback(arrays, merged, wframe, wblock)
+            return logits, new_arrays, store.strip(merged)
+
+        self._paged_decode = jax.jit(paged_decode)
+        self._pad = jax.jit(store.pad_prefill)
+        self._install_block = jax.jit(store.install_block)
+        self._install_state = jax.jit(kvpool.install_prefill)
+        self._extract_frame = jax.jit(store.extract_frame)
+        self._restore_frame = jax.jit(store.restore_frame)
+        self._extract_state = jax.jit(extract_slot_state)
+        self._restore_state = jax.jit(restore_slot_state)
+        self._live_nnz = jax.jit(store.live_nnz)
+
+        # host-side paging state
+        self._pos = np.zeros((self.n_slots,), np.int64)  # device pos mirror
+        self._slot_rid: dict[int, int] = {}
+        self._resident_order: list[int] = []  # slots, admission order
+        self._installing: dict = {}  # slot -> (padded pages, pending deque)
+        self._pending_frame_set: set = set()  # allocated, not yet written
+        self._install_budget = 0
+        self._reserved_frames = 0
+        self._reserved_bits = 0.0
+        self._live_bits = 0.0
+        self._density: Optional[float] = None  # None until first measurement
+        self.page_util_sketch = QuantileSketch()
+        self.peak_page_utilization = 0.0
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, req) -> int:
+        # one request alone must fit the physical budget, or admission
+        # could never make progress on it (the per-request analogue of
+        # the base engine's max_len guard)
+        rows = prompt_rows(self.cfg, len(req.prompt)) + req.max_tokens + 1
+        pages_needed = -(-rows // self.page_tokens)
+        if pages_needed > self.admission.num_pages:
+            raise ValueError(
+                f"request {req.rid}: needs {pages_needed} pages "
+                f"({rows} rows at {self.page_tokens} tokens/page), physical "
+                f"budget is {self.admission.num_pages} pages")
+        return super().submit(req)
+
+    # -- admission -----------------------------------------------------------
+
+    def _density_est(self) -> float:
+        """Measured pool density for admission projections: conservative
+        1.0 while nothing has been measured, floored away from zero so a
+        nearly-empty pool can't project pages as free."""
+        return 1.0 if self._density is None else self._density
+
+    def _projected_live(self) -> float:
+        """Live bits plus the projected cost of allocated-but-unwritten
+        (pending-install) frames, costed at the measured density."""
+        return (self._live_bits + len(self._pending_frame_set)
+                * self.admission.page_bits(self._density_est()))
+
+    def _plan(self, req):
+        n_fill = prompt_rows(self.cfg, len(req.prompt))
+        n_blocks = -(-n_fill // self.page_tokens)
+        # VLM prompts never share: chain keys hash tokens only, and the
+        # image prefix rows make equal-token prompts content-distinct
+        share = self.prefix_cache and req.img_embeds is None
+        keys = (chain_keys(req.prompt, self.page_tokens, n_fill) if share
+                else [None] * n_blocks)
+        plan = (self.table.plan_prompt(req.prompt, n_fill) if share
+                else [None] * n_blocks)
+        return plan, keys
+
+    def _can_admit(self, req) -> bool:
+        plan, _ = self._plan(req)
+        n_new = sum(1 for hit in plan if hit is None)
+        if n_new > self.alloc.n_free - self._reserved_frames:
+            return False
+        d = self._density_est()
+        if not self.admission.admits(
+                self._projected_live() + self._reserved_bits, n_new, d):
+            return False
+        self._reserved_frames += n_new
+        self._reserved_bits += n_new * self.admission.page_bits(d)
+        return True
+
+    def _can_resume(self, spilled) -> bool:
+        pay = spilled.payload
+        if pay["n_frames"] > self.alloc.n_free - self._reserved_frames:
+            return False
+        if not self.admission.admits_exact(
+                self._projected_live() + self._reserved_bits,
+                pay["wire_bits"]):
+            return False
+        self._reserved_frames += pay["n_frames"]
+        self._reserved_bits += pay["wire_bits"]
+        return True
+
+    def _admit_phase(self) -> None:
+        self._install_budget = (10 ** 9 if self.prefill_chunk is None
+                                else self.prefill_chunk)
+        self._reserved_frames = 0
+        self._reserved_bits = 0.0
+        with telemetry.span("serve.tick.schedule"):
+            admitted = self.sched.admit_paged(self._can_resume,
+                                              self._can_admit)
+        # drain older requests' pending page installs before new prompts
+        # compete for the per-tick chunk budget
+        for slot in [s for s in self._resident_order if s in self._installing]:
+            self._pump_installs(slot)
+        for tracker, spilled in admitted:
+            if spilled is not None:
+                self._resume_one(tracker, spilled)
+            else:
+                self._admit_one(tracker)  # base prefill/sample/bookkeeping
+        self._reserved_frames = 0
+        self._reserved_bits = 0.0
+
+    def _install_request(self, tracker, pcache) -> None:
+        """Admission commit: open the block table, adopt shared prefix
+        frames, queue the rest for chunked install, write slot state."""
+        req, slot, rid = tracker.req, tracker.slot, tracker.req.rid
+        plan, keys = self._plan(req)
+        self.table.open(rid)
+        pending = collections.deque()
+        for b, hit in enumerate(plan):
+            if hit is not None:
+                self.table.adopt_block(rid, hit)
+            else:
+                f = self.table.append_block(rid)
+                self._pending_frame_set.add(f)
+                pending.append((b, f, keys[b]))
+        pages = self._pad(pcache)
+        self.state = self._install_state(
+            self.state, pcache, jnp.asarray(slot, jnp.int32), len(req.prompt))
+        self._installing[slot] = (pages, pending)
+        self._slot_rid[slot] = rid
+        self._resident_order.append(slot)
+        self._pos[slot] = len(req.prompt)
+        self._pump_installs(slot)
+        jax.block_until_ready(jax.tree_util.tree_leaves(self.store_arrays)[0])
+
+    def _pump_installs(self, slot: int) -> None:
+        """Write pending prompt pages for ``slot`` while the per-tick
+        chunk budget lasts; a fully-installed slot starts decoding."""
+        pages, pending = self._installing[slot]
+        while pending and self._install_budget > 0:
+            b, f, key = pending.popleft()
+            self.store_arrays = self._install_block(
+                self.store_arrays, pages, jnp.asarray(b, jnp.int32),
+                jnp.asarray(f, jnp.int32))
+            self._pending_frame_set.discard(f)
+            if key is not None:
+                # content is now really there -> safe to share from
+                self.table.register(f, key)
+            self._install_budget -= 1
+        if not pending:
+            del self._installing[slot]
+
+    def _resume_one(self, tracker, spilled) -> None:
+        """Restore a spilled request into a fresh slot: exact packed page
+        bits and slot state back onto the device, nothing recomputed —
+        resumption is bit-identical by construction."""
+        req, slot, pay = tracker.req, tracker.slot, spilled.payload
+        with telemetry.span("serve.tick.resume", rid=req.rid, slot=slot):
+            self._ledger.install(slot)
+            self.table.open(req.rid)
+            for content in pay["frames"]:
+                f = self.table.grow(req.rid)
+                self.store_arrays = self._restore_frame(
+                    self.store_arrays, content, jnp.asarray(f, jnp.int32))
+            self.state = self._restore_state(
+                self.state, pay["state"], jnp.asarray(slot, jnp.int32))
+            jax.block_until_ready(
+                jax.tree_util.tree_leaves(self.store_arrays)[0])
+        self._pos[slot] = pay["pos"]
+        self._next_tok[slot] = pay["next_tok"]
+        self._slot_rid[slot] = req.rid
+        self._resident_order.append(slot)
+        self._results[req.rid].slot = slot
+
+    # -- spill ---------------------------------------------------------------
+
+    def _spill_slot(self, slot: int) -> None:
+        """Preempt the request in ``slot``: its exact packed page bits and
+        slot state move to host memory, its frames free immediately."""
+        tracker = self.sched.active[slot]
+        rid = tracker.req.rid
+        with telemetry.span("serve.tick.spill", rid=rid, slot=slot):
+            frames = self.table.frames_of(rid)
+            contents, nnz = [], 0.0
+            for f in frames:
+                c = jax.device_get(self._extract_frame(
+                    self.store_arrays, jnp.asarray(f, jnp.int32)))
+                contents.append(c)
+                nnz += sum(float(np.sum(leaf["nnz"])) for leaf in c.values())
+            payload = {
+                "frames": contents,
+                "state": jax.device_get(self._extract_state(
+                    self.state, jnp.asarray(slot, jnp.int32))),
+                "pos": int(self._pos[slot]),
+                "next_tok": int(self._next_tok[slot]),
+                # exact resume cost: shared frames were copied out, so the
+                # request pays for private copies when it comes back
+                "wire_bits": (nnz * self.admission.value_bits
+                              + len(frames) * self.store.page_mask_bits),
+                "n_frames": len(frames),
+            }
+            self._ledger.release(slot)
+            self.table.release(rid)
+            del self._slot_rid[slot]
+            self._resident_order.remove(slot)
+            self._pos[slot] = 0
+            self.sched.preempt(slot, payload)
+
+    # -- decode tick ---------------------------------------------------------
+
+    def _decode_slots(self) -> list:
+        # a request decodes only once every prompt page is installed
+        return sorted(s for s in self.sched.active
+                      if s not in self._installing)
+
+    def _claim_write_page(self, s: int, candidates: set):
+        """Secure the frame slot ``s`` writes this tick (growing or
+        copy-on-write-forking its current block), spilling the most
+        recently admitted unprepared request on page exhaustion.  Returns
+        ``(write_frame, write_block, read_frames)`` or None if ``s``
+        itself was the spill victim.  ``read_frames`` is captured *before*
+        the claim: a COW fork gathers the shared frame's content while
+        its write-back lands in the private copy, and a freshly grown
+        block gathers the null page (exact zeros)."""
+        rid = self._slot_rid[s]
+        wb = int(self._pos[s]) // self.page_tokens
+        row = self.table.frames_of(rid)
+        n0 = len(row)
+        while True:
+            try:
+                while self.table.n_blocks(rid) <= wb:
+                    self.table.grow(rid)
+                frame, _cow = self.table.ensure_writable(rid, wb)
+                return frame, wb, row
+            except PageError:
+                victim = next((v for v in reversed(self._resident_order)
+                               if v in candidates and v in self.sched.active),
+                              None)
+                if victim is None:  # unreachable: s itself is a candidate
+                    raise
+                if victim == s:
+                    self.table.truncate(rid, n0)  # drop half-grown blocks
+                    self._spill_slot(s)
+                    return None
+                self._spill_slot(victim)
+                candidates.discard(victim)
+
+    def _dispatch_decode(self, slots):
+        wframe = np.ones((self.n_slots,), np.int32)  # default: scratch sink
+        wblock = np.zeros((self.n_slots,), np.int32)
+        read_rows, prepared = {}, []
+        unprepared = set(slots)
+        for s in list(slots):
+            if s not in self.sched.active:
+                continue  # spilled while an earlier slot claimed its page
+            got = self._claim_write_page(s, unprepared)
+            unprepared.discard(s)
+            if got is None:
+                continue
+            wframe[s], wblock[s], read_rows[s] = got[0], got[1], got[2]
+            prepared.append(s)
+        if not prepared:
+            return None, [], 0.0
+        table_np = np.zeros((self.n_slots, self.max_blocks), np.int32)
+        for s, row in read_rows.items():
+            table_np[s, :len(row)] = row  # tail stays 0: the null page
+        active = np.zeros((self.n_slots,), bool)
+        active[prepared] = True
+        t0 = time.monotonic()
+        with telemetry.span("serve.tick.decode", active=len(prepared)):
+            logits, self.store_arrays, self.state = self._paged_decode(
+                self.params, jnp.asarray(self._next_tok, jnp.int32),
+                self.store_arrays, self.state, jnp.asarray(table_np),
+                jnp.asarray(wframe), jnp.asarray(wblock), jnp.asarray(active),
+                jax.random.PRNGKey(self.decode_steps))
+            logits = jax.block_until_ready(logits)
+        return logits, prepared, time.monotonic() - t0
+
+    def _post_sample(self, slots) -> None:
+        for s in slots:
+            self._pos[s] += 1
+
+    def release_slot(self, slot: int) -> None:
+        self._ledger.release(slot)
+        rid = self._slot_rid.pop(slot)
+        self.table.release(rid)
+        self._resident_order.remove(slot)
+        self._pos[slot] = 0
+        # no device work: freed frames drop out of the accounting mask
+        # and are fully rewritten before any table references them again
+
+    # -- accounting / spill-on-over-budget -----------------------------------
+
+    def _pool_stats(self) -> dict:
+        """Wire stats over *written* allocated frames (pending-install
+        frames hold stale bits until their page write lands); one device
+        reduction, like the monolithic pool's stats."""
+        mask = np.zeros((self.store.n_frames,), np.float32)
+        counted = [f for f in self.alloc.allocated_frames()
+                   if f not in self._pending_frame_set]
+        if counted:
+            mask[np.asarray(counted)] = 1.0
+        nnz = float(self._live_nnz(self.store_arrays, jnp.asarray(mask)))
+        return self.store.wire_stats(nnz, len(counted),
+                                     self.admission.num_pages)
+
+    def _post_stats(self, stats) -> None:
+        self._live_bits = stats["kv_wire_bytes"] * 8.0
+        if stats["kv_elems"]:
+            self._density = max(stats["kv_density"], 0.05)
+        util = self.admission.utilization(self._live_bits)
+        self.page_util_sketch.add(util)
+        self.peak_page_utilization = max(self.peak_page_utilization, util)
+        # the defined spill path: measured live bits exceeded the physical
+        # budget (density spiked past the admission-time projection) ->
+        # preempt most-recently-admitted residents until the pool fits
+        while (self.admission.over_budget(self._live_bits)
+               and len(self._resident_order) > 1):
+            victim = next((s for s in reversed(self._resident_order)
+                           if s not in self._installing), None)
+            if victim is None:
+                break
+            self._spill_slot(victim)
+            self._live_bits = self._pool_stats()["kv_wire_bytes"] * 8.0
+
+    def _backend_gauges(self, m) -> None:
+        m.set("spring_pages_allocated", self.alloc.n_allocated,
+              help="allocated page frames")
+        m.set("spring_pages_free", self.alloc.n_free,
+              help="free page frames")
+        m.set("spring_pages_utilization",
+              self.admission.utilization(self._live_bits),
+              help="live packed bits / physical page budget")
+        m.set("spring_pages_shared", len(self.table.shared_frames()),
+              help="frames referenced by more than one request")
+        m.set("spring_pages_prefix_hits_total", self.table.prefix_hits,
+              help="prompt blocks adopted from the prefix cache")
+        m.set("spring_pages_cow_copies_total", self.table.cow_copies,
+              help="copy-on-write page forks")
+        m.set("spring_pages_spills_total", self.sched.n_spills,
+              help="requests preempted to host memory")
+
+    # -- invariants / reporting ----------------------------------------------
+
+    def step(self) -> None:
+        super().step()
+        self.alloc.check_invariants()
+        self.table.check_invariants()
+
+    def summary(self) -> dict:
+        out = super().summary()
+        out["paging"] = {
+            "page_tokens": self.page_tokens,
+            "num_pages": self.admission.num_pages,
+            "logical_frames": self.alloc.capacity,
+            "overcommit": self.overcommit,
+            "prefix_cache": self.prefix_cache,
+            "max_blocks": self.max_blocks,
+            "peak_active": self.peak_active,
+            "prefix_hits": self.table.prefix_hits,
+            "cow_copies": self.table.cow_copies,
+            "spills": self.sched.n_spills,
+            "resumes": self.sched.n_resumes,
+            "allocated_frames": self.alloc.n_allocated,
+            "free_frames": self.alloc.n_free,
+            "budget_bits": self.admission.budget_bits,
+            "peak_page_utilization": self.peak_page_utilization,
+            "page_utilization": self.page_util_sketch.percentiles(),
+        }
+        return out

@@ -1,0 +1,357 @@
+"""Packed page store: the device-side half of spring-pages.
+
+Every *pageable* cache leaf (full-attention ``k``/``v``, MLA ``ckv``/
+``krope`` — token-indexed content whose row ``i`` depends only on tokens
+``<= i``) is stored as fixed-size pages of ``page_tokens`` consecutive
+cache rows, binary-mask packed per page via the ``kv_pack`` registry op:
+
+  values  (*lead, n_frames, page_elems)   leaf dtype, nonzeros front-packed
+  mask    (*lead, n_frames, n_words)      uint32 occupancy bits
+  nnz     (*lead, n_frames)               int32
+
+One logical frame id addresses the same page slot across all leaves and
+layers, so the whole mapping is one ``(n_slots, max_blocks)`` int32
+frame table.  Everything else — sliding-window rings, O(1) ssm/conv/
+rglru state, int8 mirror caches, the per-slot ``pos`` vector — is *slot
+state*: it lives in a dense slot-indexed tree exactly like the
+monolithic pool's non-packed leaves (``strip`` leaves ``None`` holes
+where the paged leaves go; ``assemble`` fills them back in).
+
+The decode tick is gather -> compute -> scatter: ``assemble`` unpacks
+the referenced frames into the dense working cache the unchanged decode
+step eats (frame 0 = null page supplies the zero tail, so the working
+cache is bit-identical to a monolithic pool slot), and ``writeback``
+re-packs exactly one page per slot — the only page a decode step can
+touch — into its frame.  ``kv_pack``/``kv_unpack`` round-trip bit-
+exactly, so pages preserve KV bits through any number of ticks, shares,
+spills and resumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import MASK_WORD_BITS
+from repro.kernels import registry
+from repro.kernels.kv_cache.ops import KV_VALUE_BITS, _n_words
+from repro.serving.kvpool import PACKED_SEQ_AXIS
+
+#: cache leaf kinds stored paged: token-indexed content.  Rings are
+#: fixed-size per-slot windows (position-independent storage) and stay
+#: slot state, like the O(1) ssm/conv/rglru leaves.
+PAGED_LEAVES = ("k", "v", "ckv", "krope")
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Static layout of one paged cache leaf."""
+
+    key: str          # stable id, path keys joined with "/"
+    keys: tuple       # raw path keys into the cache tree
+    dtype: jnp.dtype
+    lead: tuple       # dims before the slot axis (layer group for units)
+    tail: tuple       # dims after the seq axis (heads, head_dim, ...)
+    elems: int        # page_tokens * prod(tail): packed block length
+    words: int        # mask words per page
+
+    @property
+    def lead_n(self) -> int:
+        return len(self.lead)
+
+    @property
+    def lead_prod(self) -> int:
+        return int(math.prod(self.lead)) if self.lead else 1
+
+
+def _path_keys(path) -> tuple:
+    return tuple(getattr(p, "key", getattr(p, "idx", None)) for p in path)
+
+
+def _get(tree, keys):
+    node = tree
+    for k in keys:
+        node = node[k]
+    return node
+
+
+def _set(tree, keys, value) -> None:
+    node = tree
+    for k in keys[:-1]:
+        node = node[k]
+    node[keys[-1]] = value
+
+
+def _clone(tree):
+    """Structure-deep copy (dicts/tuples/lists), leaves by reference, so
+    ``_set`` on the clone never aliases the input tree."""
+    if isinstance(tree, dict):
+        return {k: _clone(v) for k, v in tree.items()}
+    if isinstance(tree, (tuple, list)):
+        return type(tree)(_clone(v) for v in tree)
+    return tree
+
+
+def prompt_rows(cfg, prompt_len: int) -> int:
+    """Cache rows a prefill fills: the prompt plus any VLM image prefix."""
+    return prompt_len + (getattr(cfg, "vlm_prefix_len", 0) or 0)
+
+
+class PagedKVStore:
+    """Layout + jit-able programs over the packed page arrays."""
+
+    def __init__(self, cfg, n_slots: int, page_tokens: int, max_blocks: int,
+                 n_frames: int, dtype=jnp.bfloat16,
+                 pack_impl: Optional[str] = None,
+                 unpack_impl: Optional[str] = None):
+        from repro.models.lm import lm_init_cache
+
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.page_tokens = page_tokens
+        self.max_blocks = max_blocks
+        self.n_frames = n_frames
+        self.tokens_cap = max_blocks * page_tokens  # working-cache seq len
+        self.dtype = jnp.dtype(dtype)
+        self._pack_impl = pack_impl
+        self._unpack_impl = unpack_impl
+
+        template = jax.eval_shape(
+            lambda: lm_init_cache(cfg, n_slots, self.tokens_cap, dtype))
+        self.leaves: dict[str, LeafSpec] = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(template)[0]:
+            keys = _path_keys(path)
+            name = str(keys[-1]) if keys else ""
+            if name not in PAGED_LEAVES:
+                continue
+            slot_ax = 1 if str(keys[0]).startswith("unit_") else 0
+            seq_ax = leaf.ndim + PACKED_SEQ_AXIS[name]
+            assert seq_ax == slot_ax + 1, (keys, leaf.shape)
+            tail = tuple(leaf.shape[seq_ax + 1:])
+            elems = page_tokens * int(math.prod(tail)) if tail else page_tokens
+            spec = LeafSpec(
+                key="/".join(str(k) for k in keys), keys=keys,
+                dtype=jnp.dtype(leaf.dtype), lead=tuple(leaf.shape[:slot_ax]),
+                tail=tail, elems=elems, words=_n_words(elems))
+            self.leaves[spec.key] = spec
+        assert self.leaves, f"{cfg.name}: no pageable cache leaves"
+
+        #: dense elems / stored mask bits of one logical page, summed over
+        #: every paged leaf — the admission controller's page unit
+        self.page_elems = sum(s.lead_prod * s.elems
+                              for s in self.leaves.values())
+        self.page_mask_bits = sum(s.lead_prod * s.words * MASK_WORD_BITS
+                                  for s in self.leaves.values())
+        self.page_dense_fp32_bytes = self.page_elems * 4.0
+
+    # -- array construction --------------------------------------------------
+
+    def init_arrays(self) -> dict:
+        """All-zero page arrays (frame 0 stays all-zero forever: the null
+        page unallocated table entries gather)."""
+        out = {}
+        for key, s in self.leaves.items():
+            out[key] = {
+                "values": jnp.zeros((*s.lead, self.n_frames, s.elems), s.dtype),
+                "mask": jnp.zeros((*s.lead, self.n_frames, s.words), jnp.uint32),
+                "nnz": jnp.zeros((*s.lead, self.n_frames), jnp.int32),
+            }
+        return out
+
+    def init_state(self) -> dict:
+        """Dense slot-state tree: the full cache with paged leaves
+        stripped to ``None`` holes and a per-slot position vector."""
+        from repro.models.lm import lm_init_cache
+
+        state = lm_init_cache(self.cfg, self.n_slots, self.tokens_cap,
+                              self.dtype)
+        state["pos"] = jnp.zeros((self.n_slots,), jnp.int32)
+        return self.strip(state)
+
+    def strip(self, cache: dict) -> dict:
+        """Replace every paged leaf with ``None`` (jax treats None as an
+        empty subtree, so the result jits as the slot-state pytree)."""
+        out = _clone(cache)
+        for s in self.leaves.values():
+            _set(out, s.keys, None)
+        return out
+
+    # -- gather: pages -> dense working cache --------------------------------
+
+    def assemble(self, store: dict, state: dict, table) -> dict:
+        """Reconstruct the dense cache tree: gather each slot's frames
+        (``table``: (n_slots, max_blocks) int32) and unpack them into
+        contiguous rows.  Unallocated blocks gather frame 0 — exact
+        zeros, the same tail a monolithic pool slot carries — and rows
+        past ``pos`` are masked out of attention by the decode step's
+        validity masks, so the assembled cache decodes bit-identically
+        to the monolithic pool."""
+        unpack = registry.resolve("kv_unpack", self._unpack_impl).fn
+        cache = _clone(state)
+        for key, s in self.leaves.items():
+            g_v = jnp.take(store[key]["values"], table, axis=s.lead_n)
+            g_m = jnp.take(store[key]["mask"], table, axis=s.lead_n)
+            dense = jax.vmap(lambda v, m: unpack(v, m, length=s.elems))(
+                g_v.reshape(-1, s.elems), g_m.reshape(-1, s.words))
+            dense = dense.reshape(*s.lead, self.n_slots, self.tokens_cap,
+                                  *s.tail)
+            _set(cache, s.keys, dense.astype(s.dtype))
+        return cache
+
+    # -- scatter: one page per row back into frames --------------------------
+
+    def _write_page(self, arrays: dict, dense, s: LeafSpec, slot, tok0,
+                    frame, pack) -> dict:
+        """Pack the ``page_tokens`` rows at ``tok0`` of ``slot`` and
+        store them in ``frame`` (all three scalars may be traced)."""
+        starts = (0,) * s.lead_n + (slot, tok0) + (0,) * len(s.tail)
+        sizes = s.lead + (1, self.page_tokens) + s.tail
+        block = jax.lax.dynamic_slice(dense, starts, sizes)
+        packed = jax.vmap(pack)(block.reshape(-1, s.elems))
+        fstarts = (0,) * s.lead_n + (frame, 0)
+        return {
+            "values": jax.lax.dynamic_update_slice(
+                arrays["values"],
+                packed["values"].reshape(*s.lead, 1, s.elems).astype(
+                    arrays["values"].dtype), fstarts),
+            "mask": jax.lax.dynamic_update_slice(
+                arrays["mask"], packed["mask"].reshape(*s.lead, 1, s.words),
+                fstarts),
+            "nnz": jax.lax.dynamic_update_slice(
+                arrays["nnz"],
+                packed["nnz"].reshape(*s.lead, 1).astype(jnp.int32),
+                fstarts[:-1]),
+        }
+
+    def writeback(self, store: dict, cache: dict, write_frame,
+                  write_block) -> dict:
+        """Per slot, re-pack the one page its decode step wrote (block
+        ``write_block[slot]`` into frame ``write_frame[slot]``).  The
+        engine routes inactive slots' frames to the scratch sink, so
+        their garbage never lands in a live frame."""
+        pack = registry.resolve("kv_pack", self._pack_impl).fn
+        new = {k: dict(v) for k, v in store.items()}
+        for key, s in self.leaves.items():
+            dense = _get(cache, s.keys)
+            for slot in range(self.n_slots):
+                new[key] = self._write_page(
+                    new[key], dense, s, slot,
+                    write_block[slot] * self.page_tokens, write_frame[slot],
+                    pack)
+        return new
+
+    # -- chunked prefill install ---------------------------------------------
+
+    def pad_prefill(self, pcache: dict) -> dict:
+        """Extract a batch-1 prefill cache's paged leaves, zero-padded to
+        the working seq length so any block can be sliced (compiled per
+        prompt length, like the prefill program itself).  Returns a flat
+        ``{leaf key: dense leaf}`` dict — the only part of the prefill
+        cache the chunked page installer needs to keep alive."""
+        out = {}
+        for key, s in self.leaves.items():
+            leaf = _get(pcache, s.keys)
+            seq_ax = s.lead_n + 1  # batch(=1) axis sits at lead_n
+            extra = self.tokens_cap - leaf.shape[seq_ax]
+            assert extra >= 0, (
+                f"{key}: prefill length {leaf.shape[seq_ax]} exceeds page "
+                f"capacity {self.tokens_cap}")
+            if extra:
+                pads = [(0, 0)] * leaf.ndim
+                pads[seq_ax] = (0, extra)
+                leaf = jnp.pad(leaf, pads)
+            out[key] = leaf
+        return out
+
+    def install_block(self, store: dict, pcache_pages: dict, block_idx,
+                      frame) -> dict:
+        """Write one prompt block (all leaves) of a padded prefill
+        (:meth:`pad_prefill` output) into ``frame`` — the unit of chunked
+        prefill; the engine spreads a long prompt's blocks over ticks."""
+        pack = registry.resolve("kv_pack", self._pack_impl).fn
+        new = {k: dict(v) for k, v in store.items()}
+        for key, s in self.leaves.items():
+            new[key] = self._write_page(
+                new[key], pcache_pages[key], s, 0,
+                block_idx * self.page_tokens, frame, pack)
+        return new
+
+    # -- spill / resume -------------------------------------------------------
+
+    def extract_frame(self, store: dict, frame) -> dict:
+        """One frame's exact packed bits (for host-side spill storage)."""
+        out = {}
+        for key, s in self.leaves.items():
+            starts = (0,) * s.lead_n + (frame,)
+            out[key] = {
+                "values": jax.lax.dynamic_slice(
+                    store[key]["values"], starts + (0,),
+                    s.lead + (1, s.elems)).reshape(*s.lead, s.elems),
+                "mask": jax.lax.dynamic_slice(
+                    store[key]["mask"], starts + (0,),
+                    s.lead + (1, s.words)).reshape(*s.lead, s.words),
+                "nnz": jax.lax.dynamic_slice(
+                    store[key]["nnz"], starts,
+                    s.lead + (1,)).reshape(s.lead),
+            }
+        return out
+
+    def restore_frame(self, store: dict, payload: dict, frame) -> dict:
+        """Inverse of :meth:`extract_frame`: bit-exact resume."""
+        new = {k: dict(v) for k, v in store.items()}
+        for key, s in self.leaves.items():
+            p = payload[key]
+            starts = (0,) * s.lead_n + (frame,)
+            new[key] = {
+                "values": jax.lax.dynamic_update_slice(
+                    new[key]["values"],
+                    jnp.asarray(p["values"]).reshape(*s.lead, 1, s.elems),
+                    starts + (0,)),
+                "mask": jax.lax.dynamic_update_slice(
+                    new[key]["mask"],
+                    jnp.asarray(p["mask"]).reshape(*s.lead, 1, s.words),
+                    starts + (0,)),
+                "nnz": jax.lax.dynamic_update_slice(
+                    new[key]["nnz"],
+                    jnp.asarray(p["nnz"]).reshape(*s.lead, 1), starts),
+            }
+        return new
+
+    # -- wire accounting ------------------------------------------------------
+
+    def live_nnz(self, store: dict, alloc_mask) -> jax.Array:
+        """Total nonzeros across allocated frames (``alloc_mask``:
+        (n_frames,) 0/1 float32) — the one device reduction behind the
+        per-tick density/wire stats."""
+        acc = jnp.zeros((), jnp.float32)
+        for key in self.leaves:
+            acc = acc + jnp.sum(store[key]["nnz"].astype(jnp.float32)
+                                * alloc_mask)
+        return acc
+
+    def wire_stats(self, nnz_total: float, n_allocated: int,
+                   num_pages: int, value_bits: int = KV_VALUE_BITS) -> dict:
+        """Same surface as ``kvpool.pool_wire_stats`` computed over
+        allocated frames, with the dense-fp32 baseline taken at the
+        *physical* budget (``num_pages`` dense pages — what a dense
+        allocator would keep resident)."""
+        elems = n_allocated * self.page_elems
+        mask_bits = n_allocated * self.page_mask_bits
+        wire_bits = nnz_total * value_bits + mask_bits
+        wire_bytes = wire_bits / 8.0
+        dense_fp32 = num_pages * self.page_dense_fp32_bytes
+        return {
+            "kv_elems": float(elems),
+            "kv_nnz": float(nnz_total),
+            "kv_density": nnz_total / elems if elems else 0.0,
+            "kv_wire_bytes": wire_bytes,
+            "kv_logical_bytes": float(
+                n_allocated * self.page_elems * self.dtype.itemsize),
+            "kv_dense_fp32_bytes": dense_fp32,
+            "kv_compression_vs_fp32": (dense_fp32 / wire_bytes
+                                       if wire_bytes else 0.0),
+        }

@@ -1,9 +1,10 @@
 """Deterministic stand-in for ``hypothesis``, used when the real package is
 not installed (the CPU test container ships without it).
 
-Only the surface this suite uses is provided: ``given``, ``settings``
-(profile registration + decorator no-op), ``HealthCheck``, and the
-strategies ``integers`` / ``floats`` / ``lists`` / ``sampled_from``.
+Only the surface this suite uses is provided: ``given`` (positional and
+keyword forms), ``settings`` (profile registration + decorator no-op),
+``HealthCheck``, and the strategies ``integers`` / ``floats`` /
+``lists`` / ``tuples`` / ``sampled_from`` / ``data``.
 ``@given`` tests run a fixed number of pseudo-random examples drawn from a
 per-test seeded RNG, so failures reproduce exactly across runs.  With the
 real hypothesis installed this module is never imported (see conftest.py).
@@ -80,7 +81,26 @@ def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strate
     return _Strategy(draw)
 
 
-def given(*strategies):
+def tuples(*strategies) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+class _DataObject:
+    """Interactive draw handle, the ``st.data()`` protocol."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: str | None = None):
+        del label  # reporting sugar only
+        return strategy.example(self._rng)
+
+
+def data() -> _Strategy:
+    return _Strategy(lambda rng: _DataObject(rng))
+
+
+def given(*strategies, **kw_strategies):
     def decorate(fn):
         # Zero-argument wrapper: pytest must not mistake the strategy
         # parameters for fixtures, so the original signature is hidden
@@ -88,7 +108,9 @@ def given(*strategies):
         def runner():
             rng = random.Random(f"spring:{fn.__module__}.{fn.__name__}")
             for _ in range(_MAX_EXAMPLES):
-                fn(*(s.example(rng) for s in strategies))
+                fn(*(s.example(rng) for s in strategies),
+                   **{k: s.example(rng) for k, s in
+                      sorted(kw_strategies.items())})
 
         runner.__name__ = fn.__name__
         runner.__module__ = fn.__module__
@@ -132,7 +154,8 @@ def install() -> None:
     mod.settings = settings
     mod.HealthCheck = HealthCheck
     strat = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "lists", "sampled_from"):
+    for name in ("integers", "floats", "lists", "tuples", "sampled_from",
+                 "data"):
         setattr(strat, name, globals()[name])
     mod.strategies = strat
     sys.modules["hypothesis"] = mod

@@ -55,6 +55,11 @@ def pytest_configure(config):
         "telemetry: spring-trace metrics/span/latency-attribution suite "
         "(CI telemetry job runs `pytest -m telemetry`)",
     )
+    config.addinivalue_line(
+        "markers",
+        "paging: spring-pages paged/COW KV pool parity + property suite "
+        "(CI paging job runs `pytest -m paging`)",
+    )
 
 
 @pytest.fixture(autouse=True)

@@ -1,0 +1,435 @@
+"""spring-pages seal (ISSUE 7).
+
+The paged, copy-on-write KV pool must be *bit-identical*, per request,
+to the slot-monolithic pool (and through it to the static reference
+path) across all three numerics modes — including runs where requests
+share prompt prefixes copy-on-write and runs that exercise the
+density-aware spill/resume path.  The pure-python allocator / block
+table / admission layers are property-tested with hypothesis: no page
+leaks, refcounts hit zero exactly at release, COW never aliases a
+written page, and admission never leaves the pool over its physical
+budget once the spill path has run.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_arch
+from repro.launch.serve import serve_session, serving_config, static_reference_session
+from repro.optim.optimizers import OptimizerConfig
+from repro.runtime.train import StepConfig
+from repro.serving.engine import ServingEngine
+from repro.serving.kvpool import SlotLedger
+from repro.serving.paging import (
+    AdmissionController,
+    BlockTable,
+    PageAllocator,
+    PageError,
+    PagedServingEngine,
+    chain_keys,
+)
+
+pytestmark = pytest.mark.paging
+
+ARCH = "llama3.2-1b"
+BATCH, PROMPT, GEN = 3, 8, 5
+
+
+# =========================================================================
+# allocator properties (S3) — pure python, no jax
+# =========================================================================
+
+ops_strategy = st.lists(
+    st.tuples(st.integers(0, 2), st.integers(0, 10 ** 6)),
+    min_size=1, max_size=80)
+
+
+@given(capacity=st.integers(1, 12), ops=ops_strategy)
+def test_allocator_stream_no_leaks(capacity, ops):
+    """Random alloc/incref/decref streams: conservation holds after every
+    op, and draining every reference returns the pool to fully free."""
+    alloc = PageAllocator(capacity)
+    live = {}  # frame -> model refcount
+    for op, pick in ops:
+        if op == 0:  # alloc
+            if alloc.n_free:
+                f = alloc.alloc()
+                assert f not in live and f >= PageAllocator.RESERVED
+                live[f] = 1
+            else:
+                with pytest.raises(PageError, match="out of pages"):
+                    alloc.alloc()
+        elif live:
+            f = sorted(live)[pick % len(live)]
+            if op == 1:
+                alloc.incref(f)
+                live[f] += 1
+            else:
+                left = alloc.decref(f)
+                live[f] -= 1
+                assert left == live[f]
+                if live[f] == 0:
+                    del live[f]
+        alloc.check_invariants()
+        assert alloc.n_allocated == len(live)
+        for f, n in live.items():
+            assert alloc.refcount(f) == n
+    for f in list(live):
+        for _ in range(live[f]):
+            alloc.decref(f)
+    assert alloc.n_free == capacity and alloc.n_allocated == 0
+
+
+def test_allocator_errors():
+    alloc = PageAllocator(2)
+    f = alloc.alloc()
+    alloc.decref(f)
+    with pytest.raises(PageError, match="double free"):
+        alloc.decref(f)
+    with pytest.raises(PageError, match="unallocated"):
+        alloc.incref(f)
+    assert isinstance(PageError("x"), ValueError)  # callers catch ValueError
+    with pytest.raises(PageError):
+        PageAllocator(0)
+
+
+def test_allocator_reuses_lowest_frame_deterministically():
+    alloc = PageAllocator(4)
+    frames = [alloc.alloc() for _ in range(4)]
+    alloc.decref(frames[1])
+    alloc.decref(frames[0])
+    assert alloc.alloc() == frames[0]  # lowest free first, always
+    assert alloc.alloc() == frames[1]
+
+
+# =========================================================================
+# chain keys / block table properties (S3)
+# =========================================================================
+
+tokens_strategy = st.lists(st.integers(0, 7), min_size=1, max_size=24)
+
+
+@given(a=tokens_strategy, b=tokens_strategy,
+       pt=st.integers(1, 5), m=st.integers(0, 24))
+def test_chain_keys_share_exactly_the_common_prefix(a, b, pt, m):
+    """Two prompts agreeing on their first m tokens share exactly their
+    common full-block keys — the prefix-cache hit condition."""
+    m = min(m, len(a), len(b))
+    b = a[:m] + b[m:]
+    ka = chain_keys(a, pt, len(a))
+    kb = chain_keys(b, pt, len(b))
+    shared_full = m // pt
+    for i in range(min(shared_full, len(ka), len(kb))):
+        if ka[i][0] == "full" and kb[i][0] == "full":
+            assert ka[i] == kb[i]
+    if a == b:
+        assert ka == kb
+    # a full and a partial block never collide, whatever the hashes do
+    assert all(k[0] in ("full", "partial") for k in ka)
+
+
+@given(data=st.data())
+@settings(max_examples=25)
+def test_blocktable_cow_never_aliases_a_written_page(data):
+    """After ensure_writable, the returned frame has refcount 1 and is
+    referenced by no other request — writes can never leak into a page a
+    second request still reads."""
+    pt = data.draw(st.integers(1, 4), label="page_tokens")
+    alloc = PageAllocator(64)
+    table = BlockTable(alloc, pt, prefix_cache=True)
+    n_req = data.draw(st.integers(2, 4), label="n_req")
+    base = data.draw(st.lists(st.integers(0, 3), min_size=pt,
+                              max_size=4 * pt), label="base")
+    for rid in range(n_req):
+        # half the requests reuse the base prompt (forcing shared frames)
+        toks = base if rid % 2 == 0 else data.draw(
+            st.lists(st.integers(0, 3), min_size=1, max_size=4 * pt),
+            label=f"toks{rid}")
+        keys = chain_keys(toks, pt, len(toks))
+        plan = table.plan_prompt(toks, len(toks))
+        table.open(rid)
+        for b, hit in enumerate(plan):
+            if hit is not None:
+                table.adopt_block(rid, hit)
+            else:
+                table.append_block(rid, key=keys[b])
+        table.check_invariants()
+    writes = data.draw(st.lists(st.integers(0, 10 ** 6), max_size=12),
+                       label="writes")
+    for pick in writes:
+        rid = pick % n_req
+        if not table.n_blocks(rid):
+            continue
+        frame, cow = table.ensure_writable(
+            rid, (pick // n_req) % table.n_blocks(rid))
+        assert alloc.refcount(frame) == 1
+        for other in range(n_req):
+            if other != rid:
+                assert frame not in table.frames_of(other)
+        table.check_invariants()
+    for rid in range(n_req):
+        table.release(rid)
+    assert alloc.n_allocated == 0 and alloc.n_free == alloc.capacity
+
+
+def test_blocktable_release_raises_on_double_free():
+    alloc = PageAllocator(8)
+    table = BlockTable(alloc, 2)
+    table.open(7)
+    table.append_block(7)
+    table.release(7)
+    assert alloc.n_allocated == 0
+    with pytest.raises(PageError, match="double free"):
+        table.release(7)
+
+
+def test_blocktable_shared_partial_tail_forks_on_write():
+    """Identical prompts share even the partial tail block; the first
+    decode write forks it (cow) leaving the sharer's page untouched."""
+    alloc = PageAllocator(8)
+    table = BlockTable(alloc, 4, prefix_cache=True)
+    toks = [1, 2, 3, 4, 5, 6]  # full(4) + partial(2)
+    keys = chain_keys(toks, 4, len(toks))
+    table.open(0)
+    for b in range(len(keys)):
+        table.append_block(0, key=keys[b])
+    plan = table.plan_prompt(toks, len(toks))
+    assert plan == table.frames_of(0)  # both blocks hit, partial included
+    table.open(1)
+    for hit in plan:
+        table.adopt_block(1, hit)
+    assert table.prefix_hits == 2
+    shared_tail = table.frames_of(1)[-1]
+    frame, cow = table.ensure_writable(1, 1)
+    assert cow and frame != shared_tail
+    assert table.frames_of(0)[-1] == shared_tail  # request 0 unaffected
+    assert table.cow_copies == 1
+
+
+# =========================================================================
+# admission arithmetic (S3)
+# =========================================================================
+
+def test_admission_budget_is_dense_pages_at_20d_plus_1():
+    """With one mask bit per element the wire cost is exactly the paper's
+    (20*density + 1) bits/elem; the physical budget is num_pages dense
+    pages of that storage."""
+    elems = 320
+    adm = AdmissionController(elems, page_mask_bits=elems, num_pages=4)
+    assert adm.budget_bits == 4 * elems * 21
+    for d in (0.0, 0.25, 0.5, 1.0):
+        assert adm.page_bits(d) == pytest.approx(elems * (20 * d + 1))
+    assert adm.admits(0.0, 4, 1.0)
+    assert not adm.admits(0.0, 5, 1.0)
+    # at half density the same budget admits ~2x the dense page count
+    assert adm.admits(0.0, 7, 0.5)
+    assert adm.admits_exact(0.0, adm.budget_bits)
+    assert not adm.admits_exact(1.0, adm.budget_bits)
+    assert adm.over_budget(adm.budget_bits + 1)
+    assert adm.utilization(adm.budget_bits) == pytest.approx(1.0)
+
+
+@given(live=st.floats(0, 1e9), n=st.integers(0, 64),
+       d=st.floats(0.05, 1.0))
+def test_admission_admit_implies_within_budget(live, n, d):
+    adm = AdmissionController(256, page_mask_bits=256, num_pages=8)
+    if adm.admits(live, n, d):
+        assert adm.projected_bits(live, n, d) <= adm.budget_bits
+        if n:  # admitting more pages at the same density must cost more
+            assert (adm.projected_bits(live, n + 1, d)
+                    > adm.projected_bits(live, n, d))
+
+
+# =========================================================================
+# slot ledger (S1 regression)
+# =========================================================================
+
+def test_slot_ledger_double_release_raises():
+    led = SlotLedger(2)
+    led.install(0)
+    assert list(led.occupied) == [0]
+    led.release(0)
+    with pytest.raises(ValueError, match="double release"):
+        led.release(0)
+    with pytest.raises(ValueError, match="not installed"):
+        led.release(1)
+    led.install(0)
+    with pytest.raises(ValueError, match="already installed"):
+        led.install(0)
+    with pytest.raises(ValueError, match="out of range"):
+        led.install(2)
+    with pytest.raises(ValueError):
+        SlotLedger(0)
+
+
+# =========================================================================
+# engine parity — paged vs monolithic vs static reference
+# =========================================================================
+
+def _tokens(out) -> np.ndarray:
+    return np.asarray(out["generated"])
+
+
+@pytest.mark.parametrize("mode", ["dense", "quant", "quant_sparse"])
+def test_paged_engine_matches_static_reference(mode):
+    """serving.pages=true serves bit-identically to the static oracle in
+    every numerics mode, even when 2 slots force mid-flight joins."""
+    static = static_reference_session(
+        ARCH, reduced=True, batch=BATCH, prompt_len=PROMPT, gen=GEN, mode=mode)
+    paged = serve_session(
+        ARCH, reduced=True, batch=BATCH, prompt_len=PROMPT, gen=GEN, mode=mode,
+        slots=2, pages=True)
+    np.testing.assert_array_equal(_tokens(paged), _tokens(static))
+    assert paged["finite"]
+    assert paged["paging"]["num_pages"] >= 1  # summary surfaced
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    arch = get_arch(ARCH)
+    view = arch.view(reduced=True)
+    step_cfg = StepConfig(spring=serving_config("quant_sparse"),
+                          optimizer=OptimizerConfig())
+    from repro.models.lm import lm_init
+
+    params = lm_init(jax.random.PRNGKey(0), view.config)
+    key = jax.random.PRNGKey(3)
+    # ragged lengths (8..11): partial tail blocks exercise the COW fork
+    prompts = [
+        [int(t) for t in jax.random.randint(jax.random.fold_in(key, i),
+                                            (PROMPT + i,), 0, view.config.vocab)]
+        for i in range(4)
+    ]
+    return view, step_cfg, params, prompts
+
+
+def _run_mono(small_model, prompts, gen, n_slots, **kw):
+    view, step_cfg, params, _ = small_model
+    eng = ServingEngine(view, step_cfg, params=params, n_slots=n_slots,
+                        max_len=64, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit_prompt(p, gen, seed=100 + i)
+    out = eng.run()
+    return [r["tokens"] for r in out["per_request"]], out, eng
+
+
+def _run_paged(small_model, prompts, gen, n_slots, **kw):
+    view, step_cfg, params, _ = small_model
+    eng = PagedServingEngine(view, step_cfg, params=params, n_slots=n_slots,
+                             max_len=64, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit_prompt(p, gen, seed=100 + i)
+    out = eng.run()
+    return [r["tokens"] for r in out["per_request"]], out, eng
+
+
+def test_cow_prefix_sharing_is_bit_identical(small_model):
+    """>= 2 in-flight requests sharing a prompt prefix through COW pages
+    emit exactly the monolithic pool's tokens, prefix cache on or off."""
+    _, _, _, prompts = small_model
+    p = prompts[3]  # 11 tokens: full pages + a partial tail at pt=4
+    batch = [p, list(p), p[:8] + [5, 9], prompts[0]]
+    mono, _, _ = _run_mono(small_model, batch, GEN, n_slots=4)
+    on, out_on, eng_on = _run_paged(small_model, batch, GEN, n_slots=4,
+                                    page_tokens=4, prefix_cache=True)
+    off, _, _ = _run_paged(small_model, batch, GEN, n_slots=4,
+                           page_tokens=4, prefix_cache=False)
+    assert on == mono
+    assert off == mono
+    pg = out_on["paging"]
+    assert pg["prefix_hits"] >= 3  # identical twin + shared 8-token prefix
+    assert pg["cow_copies"] >= 1   # the twin forked its shared tail
+    assert pg["prefix_cache"] is True
+    assert eng_on.alloc.n_allocated == 0  # every page came back
+
+
+def test_spill_resume_is_bit_identical(small_model):
+    """Overcommitted admission spills the most recent resident to host
+    and resumes it with its exact packed bits: tokens unchanged."""
+    _, _, _, prompts = small_model
+    mono, _, _ = _run_mono(small_model, prompts, GEN, n_slots=4)
+    paged, out, eng = _run_paged(small_model, prompts, GEN, n_slots=4,
+                                 page_tokens=4, num_pages=8, overcommit=2.0)
+    assert paged == mono
+    pg = out["paging"]
+    assert pg["spills"] >= 1, "config did not exercise the spill path"
+    assert pg["resumes"] == pg["spills"]  # everyone came back and finished
+    assert eng.alloc.n_allocated == 0
+
+
+def test_chunked_prefill_parity_greedy_and_sampled(small_model):
+    """prefill_chunk=1 staggers prompt page installs across ticks while
+    earlier residents keep decoding; tokens stay bit-identical, greedy
+    and sampled."""
+    _, _, _, prompts = small_model
+    for greedy in (True, False):
+        mono, _, _ = _run_mono(small_model, prompts, GEN, n_slots=2,
+                               greedy=greedy)
+        paged, out, _ = _run_paged(small_model, prompts, GEN, n_slots=2,
+                                   greedy=greedy, page_tokens=4,
+                                   prefill_chunk=1)
+        assert paged == mono, f"greedy={greedy}"
+        assert out["finite"]
+
+
+def test_admission_never_exceeds_budget_after_spill(small_model):
+    """Stepping manually: after every tick either live packed bits fit
+    the physical budget or a single request remains (which the submit
+    guard guarantees fits on its own)."""
+    view, step_cfg, params, prompts = small_model
+    eng = PagedServingEngine(view, step_cfg, params=params, n_slots=4,
+                             max_len=64, page_tokens=4, num_pages=8,
+                             overcommit=2.0)
+    for i, p in enumerate(prompts):
+        eng.submit_prompt(p, GEN, seed=100 + i)
+    while eng.sched.has_work():
+        eng.step()  # runs alloc/table check_invariants internally
+        assert (not eng.admission.over_budget(eng._live_bits)
+                or len(eng._resident_order) <= 1)
+        assert eng.alloc.n_allocated <= eng.alloc.capacity
+    out = eng.summary()
+    assert out["paging"]["spills"] >= 1
+    assert eng.alloc.n_allocated == 0
+
+
+def test_engine_release_slot_double_release_raises(small_model):
+    """S1 end-to-end: once the run drained, releasing any slot again is
+    a loud ValueError on both pool backends."""
+    prompts = small_model[3]
+    _, mono_out, mono_eng = _run_mono(small_model, prompts[:1], 2, n_slots=2)
+    with pytest.raises(ValueError, match="double release|not installed"):
+        mono_eng.release_slot(0)
+    _, out, eng = _run_paged(small_model, prompts[:1], 2, n_slots=2)
+    with pytest.raises(ValueError, match="double release|not installed"):
+        eng.release_slot(0)
+    assert mono_out["finite"] and out["finite"]
+
+
+def test_paged_gauges_and_summary(small_model):
+    """The paging telemetry surface: spring_pages_* gauges inside an
+    enabled scope plus the summary()['paging'] block."""
+    from repro import telemetry
+    from repro.telemetry import TelemetryConfig
+
+    _, _, _, prompts = small_model
+    with telemetry.scope(TelemetryConfig(enabled=True)):
+        _, out, eng = _run_paged(small_model, prompts[:2], GEN, n_slots=2,
+                                 page_tokens=4)
+        m = telemetry.metrics()
+        for g in ("spring_pages_allocated", "spring_pages_free",
+                  "spring_pages_utilization", "spring_pages_shared",
+                  "spring_pages_prefix_hits_total",
+                  "spring_pages_cow_copies_total",
+                  "spring_pages_spills_total"):
+            assert m.get(g) is not None, g
+    pg = out["paging"]
+    for k in ("page_tokens", "num_pages", "logical_frames", "overcommit",
+              "max_blocks", "peak_active", "prefix_hits", "cow_copies",
+              "spills", "resumes", "budget_bits", "peak_page_utilization",
+              "page_utilization"):
+        assert k in pg, k
+    assert pg["logical_frames"] >= pg["num_pages"]
+    assert 0.0 <= pg["peak_page_utilization"] <= 1.0 + 1e-9
