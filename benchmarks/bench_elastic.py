@@ -1,0 +1,215 @@
+"""spring-survive benchmark: snapshot/restore/rescale cost + chaos seal.
+
+A short continuous-batching run is interrupted mid-flight and the
+elastic machinery is timed:
+
+  * ``snapshot`` — build the versioned artifact (packed pool bits +
+    scheduler/ledger/sampling state) and serialize it to one ``.npz``;
+  * ``restore`` — rebuild a live engine from the loaded artifact;
+  * ``rescale`` — shrink the pool below occupancy (spill path) and grow
+    it back, requests surviving;
+  * ``chaos`` — a fixed kill/roundtrip/rescale schedule replayed through
+    :class:`repro.serving.elastic.ChaosHarness`, compared token-for-token
+    against the uninterrupted oracle.
+
+Rows (name, us_per_call, derived[, impl]):
+
+  elastic.engine.<arch>.snapshot_us   derived = artifact bytes on disk
+  elastic.engine.<arch>.restore_us    derived = 1.0 iff the restored
+                                      engine finished with oracle tokens
+  elastic.engine.<arch>.rescale_us    derived = spill/resume round trips
+  elastic.engine.<arch>.chaos_match   derived = 1.0 iff every request
+                                      matched the oracle bit-exactly
+
+``--smoke`` (the CI elastic job) replays the chaos schedule on BOTH pool
+backends and fails on any token divergence, lost request, or snapshot
+that does not round-trip byte-exactly.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+import jax
+
+ARCH = "llama3.2-1b"
+MODE = "quant_sparse"
+SLOTS = 2
+MAX_LEN = 48
+GEN = 5
+N_PROMPTS = 3
+
+#: Canonical RunSpec surface for benchmarks/run.py --json.
+SPEC_RUN = "serve"
+SPEC_OVERRIDES = {
+    "arch.id": ARCH,
+    "numerics.mode": MODE,
+    "shape.gen": GEN,
+    "serving.slots": SLOTS,
+    "serving.queue": N_PROMPTS,
+    "serving.snapshot_every": 2,
+}
+
+_SETUP = None
+
+
+def _setup():
+    global _SETUP
+    if _SETUP is not None:
+        return _SETUP
+    from repro.configs import get_arch
+    from repro.launch.serve import serving_config
+    from repro.models.lm import lm_init
+    from repro.optim.optimizers import OptimizerConfig
+    from repro.runtime.train import StepConfig
+
+    view = get_arch(ARCH).view(reduced=True)
+    step_cfg = StepConfig(spring=serving_config(MODE),
+                          optimizer=OptimizerConfig())
+    params = lm_init(jax.random.PRNGKey(0), view.config)
+    key = jax.random.PRNGKey(7)
+    prompts = [[int(t) for t in
+                jax.random.randint(jax.random.fold_in(key, i), (6 + i,), 0,
+                                   view.config.vocab)]
+               for i in range(N_PROMPTS)]
+    _SETUP = (view, step_cfg, params, prompts)
+    return _SETUP
+
+
+def _engine(paged: bool):
+    from repro.serving.engine import ServingEngine
+    from repro.serving.paging import PagedServingEngine
+
+    view, step_cfg, params, prompts = _setup()
+    kw = dict(params=params, n_slots=SLOTS, max_len=MAX_LEN,
+              spec_hash="bench-elastic")
+    eng = (PagedServingEngine(view, step_cfg, page_tokens=8, **kw)
+           if paged else ServingEngine(view, step_cfg, **kw))
+    for i, p in enumerate(prompts):
+        eng.submit_prompt(p, GEN, seed=100 + i)
+    return eng
+
+
+def _tokens(out):
+    return [r["tokens"] for r in sorted(out["per_request"],
+                                        key=lambda r: r["rid"])]
+
+
+def _chaos_events():
+    from repro.serving.elastic import ChaosEvent
+
+    return [ChaosEvent(1, "snapshot"),
+            ChaosEvent(2, "kill"),
+            ChaosEvent(4, "roundtrip"),
+            ChaosEvent(6, "rescale", slots=SLOTS + 1),
+            ChaosEvent(8, "rewind")]
+
+
+def _measure(paged: bool = False) -> tuple[list[tuple], dict]:
+    from repro.kernels import registry
+    from repro.serving.elastic import (ChaosHarness, load_snapshot,
+                                       save_snapshot)
+
+    impl = registry.resolve("kv_pack", _count=False).name
+    tag = "paged" if paged else ARCH
+
+    # oracle: the uninterrupted run
+    eng = _engine(paged)
+    snap0 = eng.snapshot()
+    oracle = _tokens(eng.run())
+
+    # snapshot cost mid-flight (warm jits: reuse the same engine)
+    eng.restore(snap0)
+    for _ in range(3):
+        eng.step()
+    t0 = time.perf_counter()
+    snap = eng.snapshot()
+    fd, path = tempfile.mkstemp(suffix=".npz")
+    os.close(fd)
+    save_snapshot(snap, path)
+    snapshot_us = (time.perf_counter() - t0) * 1e6
+    snapshot_bytes = os.path.getsize(path)
+
+    # restore cost + exactness of the remaining tokens
+    loaded = load_snapshot(path)
+    os.unlink(path)
+    t0 = time.perf_counter()
+    eng.restore(loaded)
+    restore_us = (time.perf_counter() - t0) * 1e6
+    restore_ok = 1.0 if _tokens(eng.run()) == oracle else 0.0
+
+    # rescale cost: shrink below occupancy (spills), grow back
+    eng.restore(snap0)
+    for _ in range(2):
+        eng.step()
+    t0 = time.perf_counter()
+    eng.rescale(1)
+    eng.rescale(SLOTS + 1)
+    rescale_us = (time.perf_counter() - t0) * 1e6 / 2
+    spills = eng.sched.n_spills
+    rescale_ok = _tokens(eng.run()) == oracle
+
+    # chaos: fixed failure schedule vs the oracle
+    eng.restore(snap0)
+    t0 = time.perf_counter()
+    out = ChaosHarness(eng, _chaos_events(), max_steps=500).run()
+    chaos_us = (time.perf_counter() - t0) * 1e6
+    chaos_ok = 1.0 if (_tokens(out) == oracle and out["finite"]) else 0.0
+
+    rows = [
+        (f"elastic.engine.{tag}.snapshot_us", snapshot_us, snapshot_bytes,
+         impl),
+        (f"elastic.engine.{tag}.restore_us", restore_us, restore_ok, impl),
+        (f"elastic.engine.{tag}.rescale_us", rescale_us, float(spills), impl),
+        (f"elastic.engine.{tag}.chaos_match", chaos_us, chaos_ok, impl),
+    ]
+    detail = {"oracle": oracle, "restore_ok": bool(restore_ok),
+              "rescale_ok": rescale_ok, "chaos_ok": bool(chaos_ok),
+              "snapshot_bytes": snapshot_bytes, "elastic": out["elastic"]}
+    return rows, detail
+
+
+def rows() -> list[tuple]:
+    return _measure(paged=False)[0]
+
+
+def smoke() -> int:
+    """CI gate: the chaos schedule (kill / on-disk round-trip / shrink-
+    grow rescale / rewind) must leave every request bit-identical to the
+    uninterrupted oracle on both pool backends."""
+    failures = []
+    all_rows = []
+    for paged in (False, True):
+        bench_rows, detail = _measure(paged=paged)
+        all_rows += bench_rows
+        tag = "paged" if paged else "monolithic"
+        for check in ("restore_ok", "rescale_ok", "chaos_ok"):
+            if not detail[check]:
+                failures.append(f"{tag}: {check} diverged from the oracle")
+        if detail["snapshot_bytes"] <= 0:
+            failures.append(f"{tag}: empty snapshot artifact")
+        el = detail["elastic"]
+        if el["n_spills"] != el["n_resumes"]:
+            failures.append(f"{tag}: {el['n_spills']} spills but "
+                            f"{el['n_resumes']} resumes")
+    print("name,us_per_call,derived,impl")
+    for name, us, derived, impl in all_rows:
+        print(f"{name},{us:.2f},{derived:.6g},{impl}")
+    for f in failures:
+        print(f"ELASTIC SMOKE FAILURE: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main() -> None:
+    if "--smoke" in sys.argv:
+        sys.exit(smoke())
+    print("name,us_per_call,derived,impl")
+    for name, us, derived, impl in rows():
+        print(f"{name},{us:.2f},{derived:.6g},{impl}")
+
+
+if __name__ == "__main__":
+    main()

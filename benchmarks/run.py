@@ -10,6 +10,8 @@
   bench_serving       continuous-batching engine throughput + KV wire
   bench_paging        spring-pages concurrent capacity vs the monolithic
                       pool at equal physical page bytes
+  bench_elastic       spring-survive snapshot/restore/rescale cost and
+                      the chaos-schedule-vs-oracle seal
   bench_sr_training   §6 / Gupta'15 SR-vs-fp32 convergence claim
 
 Run: PYTHONPATH=src python -m benchmarks.run [--skip-slow] [--json PATH]
@@ -46,6 +48,7 @@ def main() -> None:
     json_path = args.json
     from benchmarks import (
         bench_compression,
+        bench_elastic,
         bench_kernels,
         bench_memstash,
         bench_paging,
@@ -56,7 +59,7 @@ def main() -> None:
     )
 
     suites = [bench_table1, bench_paper_figs, bench_compression, bench_memstash,
-              bench_kernels, bench_serving, bench_paging]
+              bench_kernels, bench_serving, bench_paging, bench_elastic]
     if not skip_slow:
         suites.append(bench_sr_training)
 
@@ -147,6 +150,20 @@ def main() -> None:
             "peak_page_utilization": by_name.get(
                 f"paging.engine.{ARCH_PAGE}.page_utilization"),
         }
+        # spring-survive attribution: snapshot artifact size, restore
+        # latency and the chaos-vs-oracle seal from the bench_elastic rows
+        from benchmarks.bench_elastic import ARCH as ARCH_EL
+
+        by_us = {r["name"]: r["us_per_call"] for r in records}
+        elastic = {
+            "snapshot_bytes": by_name.get(
+                f"elastic.engine.{ARCH_EL}.snapshot_us"),
+            "snapshot_us": by_us.get(f"elastic.engine.{ARCH_EL}.snapshot_us"),
+            "restore_us": by_us.get(f"elastic.engine.{ARCH_EL}.restore_us"),
+            "rescale_us": by_us.get(f"elastic.engine.{ARCH_EL}.rescale_us"),
+            "chaos_match": by_name.get(
+                f"elastic.engine.{ARCH_EL}.chaos_match"),
+        }
         payload = {
             "backend": jax.default_backend(),
             "kernel_policy": registry.current_policy().describe(),
@@ -154,6 +171,7 @@ def main() -> None:
             "backward_tile_skip": backward_skip,
             "serving": serving,
             "paging": paging,
+            "elastic": elastic,
             # per-suite canonical RunSpec + hash: ties every BENCH row
             # (via its spec_hash) to the exact configuration it measured
             "suites": {

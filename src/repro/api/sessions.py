@@ -295,11 +295,21 @@ class ServeSession(Session):
 
         engine = ServingEngine.from_spec(spec, params=params, mesh=self.mesh,
                                          resolved=r)
-        for i, p in enumerate(prompts):
-            engine.submit_prompt(p, gen, seed=seed + i, img_embeds=img[i])
+        if spec.serving.restore_path:
+            # spring-survive resume: drain a saved snapshot's in-flight
+            # work instead of submitting fresh requests — the restored
+            # engine emits the exact remaining tokens of every request
+            engine.restore_file(spec.serving.restore_path)
+        else:
+            for i, p in enumerate(prompts):
+                engine.submit_prompt(p, gen, seed=seed + i, img_embeds=img[i])
         out = engine.run()
-        out["generated"] = jnp.asarray(
-            [req["tokens"] for req in out["per_request"]], jnp.int32)
+        # token lists may be ragged (EOS finishes / typed rejections):
+        # stack only the uniform case, keep exact lists otherwise
+        tok_lists = [req["tokens"] for req in out["per_request"]]
+        lens = {len(t) for t in tok_lists}
+        out["generated"] = (jnp.asarray(tok_lists, jnp.int32)
+                            if len(lens) == 1 else tok_lists)
         out["engine"] = True
         out["slots"] = engine.n_slots
         out["mode"] = spec.numerics.mode
@@ -635,7 +645,14 @@ def serve_spec(arch_id: str = "llama3.2-1b", *, reduced: bool = True,
                page_tokens: Optional[int] = None,
                num_pages: Optional[int] = None,
                overcommit: Optional[float] = None,
-               prefix_cache: Optional[bool] = None) -> RunSpec:
+               prefix_cache: Optional[bool] = None,
+               snapshot_every: Optional[int] = None,
+               snapshot_path: Optional[str] = None,
+               restore_path: Optional[str] = None,
+               max_queue_depth: Optional[int] = None,
+               deadline_ticks: Optional[int] = None,
+               deadline_aware: Optional[bool] = None,
+               priority_aware: Optional[bool] = None) -> RunSpec:
     """RunSpec equivalent of the legacy ``serve_session`` surface."""
     over = _call_overrides([
         ("arch.id", arch_id), ("arch.reduced", reduced),
@@ -651,10 +668,17 @@ def serve_spec(arch_id: str = "llama3.2-1b", *, reduced: bool = True,
         over.append(("serving.slots", slots, "call:serving.slots"))
     if queue is not None:
         over.append(("serving.queue", queue, "call:serving.queue"))
-    # paged-pool knobs: None keeps the spec default
+    # paged-pool + spring-survive knobs: None keeps the spec default
     for key, value in (("page_tokens", page_tokens), ("num_pages", num_pages),
                        ("overcommit", overcommit),
-                       ("prefix_cache", prefix_cache)):
+                       ("prefix_cache", prefix_cache),
+                       ("snapshot_every", snapshot_every),
+                       ("snapshot_path", snapshot_path),
+                       ("restore_path", restore_path),
+                       ("max_queue_depth", max_queue_depth),
+                       ("deadline_ticks", deadline_ticks),
+                       ("deadline_aware", deadline_aware),
+                       ("priority_aware", priority_aware)):
         if value is not None:
             over.append((f"serving.{key}", value, f"call:serving.{key}"))
     return build_spec("serve", overrides=over)

@@ -194,6 +194,14 @@ class ServingSection:
     num_pages: Optional[int] = None  # physical page budget; None = dense-equiv
     overcommit: float = 1.5  # logical frames / physical pages
     prefix_cache: bool = True  # chain-hash prefix sharing (COW)
+    # spring-survive (DESIGN.md §13): elastic serving under failure/overload
+    snapshot_every: int = 0  # save an engine snapshot every N ticks (0 = off)
+    snapshot_path: str = ""  # "" = spring_snapshot.npz when snapshots are on
+    restore_path: str = ""  # restore + drain a saved snapshot, skip new work
+    max_queue_depth: Optional[int] = None  # shed "queue_full" past this depth
+    deadline_ticks: Optional[int] = None  # shed "deadline" if queued longer
+    deadline_aware: bool = False  # EDF admission instead of strict FCFS
+    priority_aware: bool = False  # admit higher Request.priority first
 
 
 @dataclasses.dataclass(frozen=True)
@@ -378,6 +386,20 @@ class RunSpec:
                              separators=(",", ":"))
         return hashlib.sha256(compact.encode()).hexdigest()[:16]
 
+    def state_hash(self) -> str:
+        """``spec_hash`` with the restart-operational serving fields
+        (snapshot cadence/paths) neutralized — the stamp embedded in
+        serving snapshots (DESIGN.md §13).  A run that merely *restores*
+        an artifact necessarily differs from the run that wrote it in
+        exactly these fields, so they must not poison the compatibility
+        check; anything numerics/shape/arch-shaped still rejects."""
+        d = self.to_dict()
+        for field in ("snapshot_every", "snapshot_path", "restore_path"):
+            d["serving"][field] = ServingSection.__dataclass_fields__[
+                field].default
+        compact = json.dumps(d, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(compact.encode()).hexdigest()[:16]
+
     def payload(self) -> dict:
         """The reproducibility block every run artifact embeds."""
         return {
@@ -440,6 +462,22 @@ class RunSpec:
             raise SpecError("serving.overcommit must be >= 1.0")
         if self.serving.num_pages is not None and self.serving.num_pages < 1:
             raise SpecError("serving.num_pages must be >= 1 (or null)")
+        if self.serving.snapshot_every < 0:
+            raise SpecError("serving.snapshot_every must be >= 0")
+        if (self.serving.max_queue_depth is not None
+                and self.serving.max_queue_depth < 1):
+            raise SpecError("serving.max_queue_depth must be >= 1 (or null)")
+        if (self.serving.deadline_ticks is not None
+                and self.serving.deadline_ticks < 0):
+            raise SpecError("serving.deadline_ticks must be >= 0 (or null)")
+        if self.serving.restore_path and self.serving.snapshot_every:
+            # one engine either resumes an artifact or produces them; both
+            # at once would overwrite the artifact being drained
+            if (self.serving.snapshot_path or "spring_snapshot.npz") == \
+                    self.serving.restore_path:
+                raise SpecError(
+                    "serving.restore_path equals the snapshot output path; "
+                    "set serving.snapshot_path to a different file")
         try:
             KernelPolicy.parse(self._kernel_spec())
         except ValueError as e:

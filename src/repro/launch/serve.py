@@ -46,6 +46,12 @@ LEGACY_FLAGS = (
     flag("--page-tokens", "serving.page_tokens", type=int),
     flag("--prefix-cache", "serving.prefix_cache", type=lambda s: s.lower()
          not in ("0", "false", "no", "off")),
+    # spring-survive: periodic snapshots, restore-and-drain, load shedding
+    flag("--snapshot-every", "serving.snapshot_every", type=int),
+    flag("--snapshot-path", "serving.snapshot_path"),
+    flag("--restore", "serving.restore_path"),
+    flag("--max-queue-depth", "serving.max_queue_depth", type=int),
+    flag("--deadline-ticks", "serving.deadline_ticks", type=int),
 )
 
 
@@ -149,6 +155,14 @@ def main(argv=None):
               f"token p50/p95/p99 {la['token_s']['p50']*1e3:.1f}/"
               f"{la['token_s']['p95']*1e3:.1f}/{la['token_s']['p99']*1e3:.1f}ms, "
               f"tick utilization {la['tick_utilization']:.2f}")
+        el = out.get("elastic") or {}
+        if any(el.get(k) for k in ("n_rejected", "n_spills", "n_rescales",
+                                   "n_snapshots", "n_restores")):
+            print(f"elastic: shed {el['n_rejected']} ({el['rejected']}), "
+                  f"spills {el['n_spills']}/{el['n_resumes']} resumed, "
+                  f"rescales {el['n_rescales']}, "
+                  f"snapshots {el['n_snapshots']}, "
+                  f"restores {el['n_restores']}")
         if out.get("paging"):
             p = out["paging"]
             print(f"paging: {p['num_pages']} pages x {p['page_tokens']} tok "
@@ -160,11 +174,13 @@ def main(argv=None):
     if "telemetry" in out:
         print(f"telemetry: {out['telemetry']['spans']} spans -> "
               f"{out['telemetry']['trace_path']} (load in Perfetto)")
-    print("sample tokens:", out["generated"][0][:12])
+    if len(out["generated"]):
+        print("sample tokens:", list(out["generated"][0][:12]))
     print(f"spec {out['spec_hash']}")
     if args.json:
         payload = {k: v for k, v in out.items() if k != "generated"}
-        payload["generated_first"] = [int(t) for t in out["generated"][0]]
+        payload["generated_first"] = ([int(t) for t in out["generated"][0]]
+                                      if len(out["generated"]) else [])
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, default=float)
 

@@ -57,7 +57,13 @@ class StragglerWatchdog:
         self._t0 = time.monotonic()
 
     def step_end(self, step: int) -> WatchdogEvent:
+        if self._t0 is None:
+            # used to be a bare TypeError from the float arithmetic below
+            raise RuntimeError(
+                "StragglerWatchdog.step_end() called without a matching "
+                "step_start()")
         dt = time.monotonic() - self._t0
+        self._t0 = None  # consume: a double step_end is the same bug
         self._seen += 1
         slow = False
         if self.ewma is None:

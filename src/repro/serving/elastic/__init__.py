@@ -1,0 +1,29 @@
+"""spring-survive: elastic serving under failure and overload.
+
+Snapshot/restore (exact packed-bits engine state, versioned and
+spec-hash-stamped), live slot/page rescaling, and the chaos harness that
+seals them against the uninterrupted oracle (DESIGN.md §13).
+"""
+
+from repro.serving.elastic.chaos import ChaosEvent, ChaosHarness
+from repro.serving.elastic.snapshot import (
+    SNAPSHOT_VERSION,
+    SnapshotError,
+    apply_snapshot,
+    build_snapshot,
+    check_compatible,
+    load_snapshot,
+    save_snapshot,
+)
+
+__all__ = [
+    "SNAPSHOT_VERSION",
+    "SnapshotError",
+    "ChaosEvent",
+    "ChaosHarness",
+    "apply_snapshot",
+    "build_snapshot",
+    "check_compatible",
+    "load_snapshot",
+    "save_snapshot",
+]

@@ -33,11 +33,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import telemetry
+from repro.runtime.resilience import StragglerWatchdog
 from repro.serving import kvpool
 from repro.serving.request import Request, RequestResult
-from repro.serving.scheduler import SlotScheduler
+from repro.serving.scheduler import ShedPolicy, SlotScheduler
 from repro.serving.steps import make_decode_step, make_prefill_step
 from repro.telemetry.sketch import QuantileSketch
+
+
+def _shed_from_section(s) -> Optional[ShedPolicy]:
+    """ShedPolicy from a ServingSection; None when every knob is off (the
+    scheduler is then byte-for-byte the historical FCFS one)."""
+    if (s.max_queue_depth is None and s.deadline_ticks is None
+            and not s.deadline_aware and not s.priority_aware):
+        return None
+    return ShedPolicy(max_queue_depth=s.max_queue_depth,
+                      deadline_ticks=s.deadline_ticks,
+                      deadline_aware=s.deadline_aware,
+                      priority_aware=s.priority_aware)
 
 
 class ServingEngine:
@@ -59,7 +72,11 @@ class ServingEngine:
             params=params,
             n_slots=spec.shape.batch if s.slots is None else s.slots,
             max_len=spec.shape.prompt_len + spec.shape.gen + 1,
-            greedy=s.greedy, mesh=mesh, reduced=False, seed=spec.seeds.seed)
+            greedy=s.greedy, mesh=mesh, reduced=False, seed=spec.seeds.seed,
+            spec_hash=spec.state_hash(), shed=_shed_from_section(s),
+            snapshot_every=s.snapshot_every,
+            snapshot_path=s.snapshot_path or (
+                "spring_snapshot.npz" if s.snapshot_every else ""))
         if getattr(s, "pages", False) and cls is ServingEngine:
             # serving.pages flips the backend to the paged COW pool; the
             # engine contract (submit/step/run/summary) is unchanged
@@ -71,15 +88,32 @@ class ServingEngine:
                 prefix_cache=s.prefix_cache, **kw)
         return cls(r.view, r.step, **kw)
 
+    #: snapshot/restore artifact tag — snapshots from one pool backend
+    #: never restore into the other (the packed layouts differ)
+    backend_kind = "monolithic"
+
     def __init__(self, arch, step_cfg, *, params=None, n_slots: int = 4,
                  max_len: int = 256, greedy: bool = True, mesh=None,
-                 reduced: bool = True, seed: int = 0):
+                 reduced: bool = True, seed: int = 0,
+                 spec_hash: Optional[str] = None,
+                 shed: Optional[ShedPolicy] = None,
+                 snapshot_every: int = 0, snapshot_path: str = "",
+                 watchdog: Optional[StragglerWatchdog] = None):
         assert not arch.is_encdec, "engine serves decoder-only LMs"
         self.cfg = arch.reduced() if reduced else arch.config
         self.step_cfg = step_cfg
         self.greedy = greedy
         self.n_slots = n_slots
         self.max_len = max_len
+        self.spec_hash = spec_hash
+        self.shed_policy = shed
+        self.snapshot_every = int(snapshot_every)
+        self.snapshot_path = snapshot_path
+        # tick-time straggler detection: serving ticks are bimodal
+        # (prefill+compile ticks dwarf steady decode ticks), so the
+        # default threshold is loose and warmup covers first compiles
+        self.watchdog = watchdog if watchdog is not None else (
+            StragglerWatchdog(threshold=4.0, warmup_steps=5))
         if params is None:
             from repro.models.lm import lm_init
 
@@ -131,19 +165,34 @@ class ServingEngine:
         #: most concurrent resident (installed) requests seen — the
         #: capacity number bench_paging compares across pool backends
         self.peak_active = 0
+        # spring-survive counters (DESIGN.md §13)
+        self.n_rejected: dict = {}  # reason -> count
+        self.n_rescales = 0
+        self.n_snapshots = 0
+        self.n_restores = 0
+        self.slow_ticks = 0
 
     # -- backend construction (overridden by the paged engine) --------------
 
     def _make_scheduler(self, n_slots: int) -> SlotScheduler:
-        return SlotScheduler(n_slots)
+        return SlotScheduler(n_slots, policy=self.shed_policy)
 
     def _build_backend(self) -> None:
-        """Build the KV storage + the jitted programs against it.  The
-        base backend is the slot-monolithic packed pool; the paged engine
-        overrides this with the page store while reusing the whole
-        scheduling/sampling/accounting shell."""
+        """Build the jitted programs + the KV storage.  The base backend
+        is the slot-monolithic packed pool; the paged engine overrides
+        ``_build_pool`` with the page store while reusing the whole
+        scheduling/sampling/accounting shell.  Programs and storage are
+        split so :meth:`rescale`/:meth:`restore` can rebuild the pool at
+        a new size without re-wrapping the jits (shape changes retrace
+        through the existing jit caches)."""
+        self._build_programs()
+        self._build_pool()
+
+    def _build_pool(self) -> None:
         self.pool = kvpool.init_pool(self.cfg, self.n_slots, self.max_len,
                                      impl=self._kv_pack_impl)
+
+    def _build_programs(self) -> None:
         decode = self._decode_step
 
         def pooled_decode(params, tokens, pool, active, key):
@@ -160,6 +209,9 @@ class ServingEngine:
         self._decode = jax.jit(pooled_decode)
         self._install = jax.jit(install)
         self._release = jax.jit(kvpool.release_packed)
+        # spill/resume: one slot's exact packed bits out of / into the pool
+        self._extract_slot = jax.jit(kvpool.extract_slot_packed)
+        self._restore_slot = jax.jit(kvpool.restore_slot_packed)
 
     def _pool_stats(self) -> dict:
         """Current wire stats of the live KV storage (one device sync)."""
@@ -182,12 +234,28 @@ class ServingEngine:
             raise ValueError(
                 f"request {req.rid}: prompt {len(req.prompt)} + max_tokens "
                 f"{req.max_tokens} + 1 exceeds pool max_len {self.max_len}")
-        self.sched.submit(req)
         self._requests[req.rid] = req
         self._results[req.rid] = RequestResult(rid=req.rid, tokens=[],
                                                submit_s=self._now(),
                                                enqueue_tick=self.tick)
+        reason = self.sched.submit(req, tick=self.tick)
+        if reason is not None:
+            self._reject(req.rid, reason)
         return req.rid
+
+    def _reject(self, rid: int, reason: str) -> None:
+        """Record a typed rejection: the request is finished, carries no
+        tokens, and its result says exactly why (never silent loss)."""
+        res = self._results[rid]
+        res.rejected = reason
+        res.finished_by = "rejected"
+        res.done_s = self._now()
+        res.finish_tick = self.tick
+        self.n_rejected[reason] = self.n_rejected.get(reason, 0) + 1
+        if telemetry.enabled():
+            telemetry.metrics().inc(
+                "spring_serve_shed_total", 1,
+                help="requests shed with a typed rejection reason")
 
     def submit_prompt(self, prompt, max_tokens: int, **kw) -> int:
         rid = self._next_rid
@@ -207,9 +275,20 @@ class ServingEngine:
         return int(jax.random.categorical(key, row_logits))
 
     def step(self) -> None:
+        self.watchdog.step_start()
         with telemetry.span("serve.tick", tick=self.tick):
             self._step_body()
         self.tick += 1
+        ev = self.watchdog.step_end(self.tick)
+        if ev.slow:
+            self.slow_ticks += 1
+        if telemetry.enabled():
+            m = telemetry.metrics()
+            m.set("spring_serve_tick_ewma_s", ev.ewma,
+                  help="EWMA of serving-tick wall seconds (watchdog)")
+            if ev.slow:
+                m.inc("spring_serve_slow_ticks_total", 1,
+                      help="serving ticks the straggler watchdog flagged")
 
     def _step_body(self) -> None:
         self._admit_phase()
@@ -283,10 +362,29 @@ class ServingEngine:
     # -- tick phases (the paged engine overrides the backend-specific ones) --
 
     def _admit_phase(self) -> None:
+        self._shed_phase()
         with telemetry.span("serve.tick.schedule"):
-            admitted = self.sched.admit()
-        for tracker in admitted:
-            self._admit_one(tracker)
+            admitted = self.sched.admit_gated(self._can_resume,
+                                              self._can_admit)
+        for tracker, spilled in admitted:
+            if spilled is not None:
+                self._resume_one(tracker, spilled)
+            else:
+                self._admit_one(tracker)
+
+    def _shed_phase(self) -> None:
+        """Expire queued requests whose admission deadline passed."""
+        for req, reason in self.sched.shed_expired(self.tick):
+            self._reject(req.rid, reason)
+
+    def _can_admit(self, req) -> bool:
+        """Admission feasibility gate (the paged backend projects page
+        budgets here); the monolithic pool always has room for a free
+        slot's request."""
+        return True
+
+    def _can_resume(self, spilled) -> bool:
+        return True
 
     def _admit_one(self, tracker) -> None:
         req = tracker.req
@@ -316,6 +414,136 @@ class ServingEngine:
                                   len(tracker.req.prompt))
         jax.block_until_ready(jax.tree_util.tree_leaves(self.pool)[0])
 
+    # -- spill / resume (monolithic backend; the paged engine overrides) -----
+
+    def _spill_slot(self, slot: int) -> None:
+        """Preempt the request in ``slot``: its exact packed pool bits
+        move to host memory, the slot frees, the request parks in the
+        scheduler's resume queue."""
+        tracker = self.sched.active[slot]
+        with telemetry.span("serve.tick.spill", rid=tracker.req.rid,
+                            slot=slot):
+            payload = {
+                "slot_state": jax.device_get(self._extract_slot(
+                    self.pool, jnp.asarray(slot, jnp.int32))),
+                "next_tok": int(self._next_tok[slot]),
+            }
+            self._ledger.release(slot)
+            self.pool = self._release(self.pool, jnp.asarray(slot, jnp.int32))
+            self._next_tok[slot] = 0
+            self.sched.preempt(slot, payload)
+
+    def _resume_one(self, tracker, spilled) -> None:
+        """Splice a spilled request's exact packed bits into its new slot
+        — nothing recomputed, resumption is bit-identical by
+        construction."""
+        slot, pay = tracker.slot, spilled.payload
+        with telemetry.span("serve.tick.resume", rid=tracker.req.rid,
+                            slot=slot):
+            self._ledger.install(slot)
+            self.pool = self._restore_slot(self.pool, pay["slot_state"],
+                                           jnp.asarray(slot, jnp.int32))
+            jax.block_until_ready(jax.tree_util.tree_leaves(self.pool)[0])
+        self._next_tok[slot] = pay["next_tok"]
+        self._results[tracker.req.rid].slot = slot
+
+    # -- elastic: rescale / snapshot / restore (DESIGN.md §13) ---------------
+
+    def rescale(self, slots: Optional[int] = None) -> None:
+        """Re-size the slot pool on a live engine without dropping work:
+        every active request spills (exact packed bits), the pool is
+        rebuilt at the new size, and the resume queue drains back in on
+        the following ticks — highest priority first, so shrinking below
+        occupancy leaves exactly the lowest-priority requests parked on
+        the spill path."""
+        new = self.n_slots if slots is None else int(slots)
+        if new < 1:
+            raise ValueError(f"rescale: slots must be >= 1, got {new}")
+        with telemetry.span("serve.rescale", slots=new):
+            self._pre_rescale()
+            for slot in sorted(self.sched.active):
+                self._spill_slot(slot)
+            self.sched.rescale(new)
+            self.n_slots = new
+            self._ledger = kvpool.SlotLedger(new)
+            self._next_tok = np.zeros((new,), np.int64)
+            self._build_pool()
+        self.n_rescales += 1
+
+    def _pre_rescale(self) -> None:
+        """Backend hook before the spill-everything phase of a rescale."""
+
+    def _pre_snapshot(self) -> None:
+        """Backend hook before state capture (the paged engine flushes
+        chunked prompt installs here so no half-installed trees exist)."""
+
+    def _signature(self) -> dict:
+        """Structural identity a snapshot must match to restore (pool
+        geometry fields — ``n_slots`` here, plus page geometry on the
+        paged engine — are adapted by rebuilding instead)."""
+        return {
+            "n_slots": self.n_slots, "max_len": self.max_len,
+            "greedy": self.greedy,
+            "kv_pack_impl": self._kv_pack_impl,
+            "kv_unpack_impl": self._kv_unpack_impl,
+            "vocab": int(self.cfg.vocab), "d_model": int(self.cfg.d_model),
+        }
+
+    def _reconfigure(self, sig: dict) -> None:
+        """Adapt pool geometry to a snapshot taken at another size."""
+        new = int(sig["n_slots"])
+        if new != self.n_slots:
+            self.n_slots = new
+            self._build_pool()
+
+    def _snapshot_backend(self) -> dict:
+        from repro.serving.elastic.snapshot import tree_to_host_leaves
+
+        return {"pool": tree_to_host_leaves(self.pool)}
+
+    def _restore_backend(self, b: dict) -> None:
+        from repro.serving.elastic.snapshot import leaves_to_tree
+
+        self.pool = leaves_to_tree(self.pool, b["pool"], "kv pool")
+
+    def snapshot(self) -> dict:
+        """Full engine state as one pure host tree (see
+        ``serving/elastic/snapshot.py`` for the format)."""
+        from repro.serving import elastic
+
+        self._pre_snapshot()
+        snap = elastic.build_snapshot(self)
+        self.n_snapshots += 1
+        if telemetry.enabled():
+            telemetry.metrics().inc("spring_serve_snapshots_total", 1,
+                                    help="engine snapshots taken")
+        return snap
+
+    def restore(self, snap: dict) -> None:
+        """Restore this engine to a snapshot's exact state; the restored
+        engine emits the exact remaining tokens of every in-flight
+        request.  Raises :class:`~repro.serving.elastic.SnapshotError` on
+        version / spec-hash / structure mismatch, before any mutation."""
+        from repro.serving import elastic
+
+        elastic.apply_snapshot(self, snap)
+        self.n_restores += 1
+        if telemetry.enabled():
+            telemetry.metrics().inc("spring_serve_restores_total", 1,
+                                    help="engine restores applied")
+
+    def save_snapshot(self, path: Optional[str] = None) -> str:
+        from repro.serving import elastic
+
+        return elastic.save_snapshot(
+            self.snapshot(), path or self.snapshot_path
+            or "spring_snapshot.npz")
+
+    def restore_file(self, path: str) -> None:
+        from repro.serving import elastic
+
+        self.restore(elastic.load_snapshot(path))
+
     def _decode_slots(self) -> list:
         """Slots that take a decode step this tick."""
         return sorted(self.sched.active)
@@ -344,10 +572,15 @@ class ServingEngine:
         """Backend-specific telemetry gauges (paged pool occupancy etc.)."""
 
     def run(self) -> dict:
-        """Drain the queue; returns results + engine metrics."""
+        """Drain the queue; returns results + engine metrics.  With
+        ``snapshot_every`` set, a restartable snapshot lands on disk every
+        N ticks (crash recovery: ``restore_file`` + ``run`` again)."""
         while self.sched.has_work():
             self.step()
             self.sched.check_invariants()
+            if (self.snapshot_every > 0
+                    and self.tick % self.snapshot_every == 0):
+                self.save_snapshot()
         return self.summary()
 
     # -- metrics ------------------------------------------------------------
@@ -370,6 +603,8 @@ class ServingEngine:
                 "finish_tick": r.finish_tick,
                 "decode_ticks": r.decode_ticks,
                 "finished_by": r.finished_by,
+                "status": r.status,
+                "rejected": r.rejected,
                 "slo_met": r.slo_met(self._requests[r.rid]),
             }
             for r in results
@@ -407,5 +642,16 @@ class ServingEngine:
             "peak_kv_wire_bytes": self.peak_kv_wire_bytes,
             "peak_active": self.peak_active,
             "finite": self.finite,
+            # spring-survive: shedding / preemption / elasticity counters
+            "elastic": {
+                "rejected": dict(self.n_rejected),
+                "n_rejected": sum(self.n_rejected.values()),
+                "n_spills": self.sched.n_spills,
+                "n_resumes": self.sched.n_resumes,
+                "n_rescales": self.n_rescales,
+                "n_snapshots": self.n_snapshots,
+                "n_restores": self.n_restores,
+                "slow_ticks": self.slow_ticks,
+            },
             **stats,
         }

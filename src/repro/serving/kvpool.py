@@ -255,6 +255,69 @@ def install_prefill(dense_pool: dict, prefill_cache: dict, slot,
     return jax.tree_util.tree_map_with_path(one, dense_pool)
 
 
+def _slice_axis(arr, ax: int, slot):
+    starts = [0] * arr.ndim
+    starts[ax] = slot
+    sizes = list(arr.shape)
+    sizes[ax] = 1
+    return jax.lax.dynamic_slice(arr, tuple(starts), tuple(sizes))
+
+
+def _splice_axis(arr, row, ax: int, slot):
+    starts = [0] * arr.ndim
+    starts[ax] = slot
+    return jax.lax.dynamic_update_slice(arr, row.astype(arr.dtype),
+                                        tuple(starts))
+
+
+def extract_slot_packed(pool: dict, slot) -> dict:
+    """One slot's row of the *packed* pool, bit-exact: PackedKV leaves
+    become ``{"values", "mask", "nnz"}`` dicts of the slot's compressed
+    blocks (copied, never re-packed), dense state leaves and ``pos``
+    contribute their slot rows.  The spring-survive spill/rescale payload
+    for the monolithic backend — :func:`restore_slot_packed` splices it
+    back (possibly into another slot / another pool of the same shape)
+    with every bit intact.  ``slot`` is a traced scalar."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        if name == "pos":
+            return jax.lax.dynamic_slice(leaf, (slot,), (1,))
+        if not _is_packed(leaf):
+            return _slice_axis(leaf, slot_axis(path), slot)
+        slot_ax = len(leaf.shape) + PACKED_SEQ_AXIS[name] - 1
+        return {"values": _slice_axis(leaf.values, slot_ax, slot),
+                "mask": _slice_axis(leaf.mask, slot_ax, slot),
+                "nnz": _slice_axis(leaf.nnz, slot_ax, slot)}
+
+    return jax.tree_util.tree_map_with_path(one, pool, is_leaf=_is_packed)
+
+
+def restore_slot_packed(pool: dict, payload: dict, slot) -> dict:
+    """Inverse of :func:`extract_slot_packed`: splice a slot payload's
+    exact packed bits into ``slot`` of the pool."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        p = _lookup(payload, path)
+        if name == "pos":
+            return jax.lax.dynamic_update_slice(
+                leaf, jnp.asarray(p, leaf.dtype), (slot,))
+        if not _is_packed(leaf):
+            return _splice_axis(leaf, jnp.asarray(p), slot_axis(path), slot)
+        slot_ax = len(leaf.shape) + PACKED_SEQ_AXIS[name] - 1
+        return PackedKV(
+            values=_splice_axis(leaf.values, jnp.asarray(p["values"]),
+                                slot_ax, slot),
+            mask=_splice_axis(leaf.mask, jnp.asarray(p["mask"]),
+                              slot_ax, slot),
+            nnz=_splice_axis(leaf.nnz, jnp.asarray(p["nnz"]), slot_ax, slot),
+            shape=leaf.shape, dtype=leaf.dtype,
+        )
+
+    return jax.tree_util.tree_map_with_path(one, pool, is_leaf=_is_packed)
+
+
 def _lookup(tree: dict, path):
     node: Any = tree
     for p in path:

@@ -78,6 +78,8 @@ def restore_slot_state(state: dict, payload: dict, slot) -> dict:
 class PagedServingEngine(ServingEngine):
     """Continuous batching over paged, copy-on-write packed KV storage."""
 
+    backend_kind = "paged"
+
     def __init__(self, arch, step_cfg, *, page_tokens: int = 8,
                  num_pages: Optional[int] = None, overcommit: float = 1.5,
                  prefix_cache: bool = True, prefill_chunk: Optional[int] = 8,
@@ -96,9 +98,9 @@ class PagedServingEngine(ServingEngine):
     # -- backend construction ------------------------------------------------
 
     def _make_scheduler(self, n_slots: int) -> PagedScheduler:
-        return PagedScheduler(n_slots)
+        return PagedScheduler(n_slots, policy=self.shed_policy)
 
-    def _build_backend(self) -> None:
+    def _build_pool(self) -> None:
         pt = self.page_tokens
         self.max_blocks = -(-self.max_len // pt)
         # default physical budget: the dense-equivalent of the monolithic
@@ -221,6 +223,7 @@ class PagedServingEngine(ServingEngine):
         return True
 
     def _admit_phase(self) -> None:
+        self._shed_phase()
         self._install_budget = (10 ** 9 if self.prefill_chunk is None
                                 else self.prefill_chunk)
         self._reserved_frames = 0
@@ -470,6 +473,134 @@ class PagedServingEngine(ServingEngine):
               help="copy-on-write page forks")
         m.set("spring_pages_spills_total", self.sched.n_spills,
               help="requests preempted to host memory")
+
+    # -- elastic: rescale / snapshot / restore (DESIGN.md §13) ---------------
+
+    def _flush_installs(self) -> None:
+        """Land every pending chunked prompt-page write now.  Page content
+        is fixed at prefill, and per-request tokens are batch-composition
+        invariant, so landing installs early never changes any request's
+        output — it only lets the slot decode sooner."""
+        self._install_budget = 10 ** 9
+        for slot in [s for s in self._resident_order if s in self._installing]:
+            self._pump_installs(slot)
+        self._install_budget = 0
+
+    def _pre_snapshot(self) -> None:
+        self._flush_installs()
+
+    def _pre_rescale(self) -> None:
+        self._flush_installs()
+
+    def rescale(self, slots: Optional[int] = None,
+                num_pages: Optional[int] = None) -> None:
+        """Grow/shrink slots and/or the physical page budget live.  Every
+        in-flight or queued request must still fit the new budget alone
+        (checked before any mutation — a too-small budget would park a
+        request on the spill path forever)."""
+        new_pages = (self.admission.num_pages if num_pages is None
+                     else int(num_pages))
+        if new_pages < 1:
+            raise ValueError(f"rescale: num_pages must be >= 1, "
+                             f"got {new_pages}")
+        inflight = ([t.req for t in self.sched.active.values()]
+                    + list(self.sched._queue)
+                    + [s.req for s in self.sched._spilled])
+        for req in inflight:
+            rows = prompt_rows(self.cfg, len(req.prompt)) + req.max_tokens + 1
+            need = -(-rows // self.page_tokens)
+            if need > new_pages:
+                raise ValueError(
+                    f"rescale: request {req.rid} needs {need} pages, new "
+                    f"physical budget is {new_pages} — drain or shed it "
+                    f"first")
+        # page-utilization history survives the pool rebuild
+        sketch, peak = self.page_util_sketch, self.peak_page_utilization
+        self._num_pages_arg = new_pages
+        super().rescale(slots)
+        self.page_util_sketch, self.peak_page_utilization = sketch, peak
+
+    def _signature(self) -> dict:
+        sig = super()._signature()
+        sig.update(page_tokens=self.page_tokens,
+                   num_pages=self.admission.num_pages,
+                   overcommit=self.overcommit,
+                   prefix_cache=self.prefix_cache,
+                   max_blocks=self.max_blocks)
+        return sig
+
+    def _reconfigure(self, sig: dict) -> None:
+        if (int(sig["n_slots"]) != self.n_slots
+                or int(sig["num_pages"]) != self.admission.num_pages):
+            self.n_slots = int(sig["n_slots"])
+            self._num_pages_arg = int(sig["num_pages"])
+            self._build_pool()
+
+    def _snapshot_backend(self) -> dict:
+        from repro.serving.elastic.snapshot import tree_to_host_leaves
+
+        assert not self._installing and not self._pending_frame_set, (
+            "_pre_snapshot must flush chunked installs first")
+        return {
+            "store": tree_to_host_leaves(self.store_arrays),
+            "state": tree_to_host_leaves(self.state),
+            "alloc": {
+                "capacity": self.alloc.capacity,
+                "free": list(self.alloc._free),
+                "ref": [[f, n] for f, n in sorted(self.alloc._ref.items())],
+            },
+            "table": {
+                "blocks": [[rid, list(fr)]
+                           for rid, fr in sorted(self.table.blocks.items())],
+                "index": [[k, f] for k, f in self.table._index.items()],
+                "frame_key": [[f, k]
+                              for f, k in self.table._frame_key.items()],
+                "prefix_hits": self.table.prefix_hits,
+                "cow_copies": self.table.cow_copies,
+            },
+            "pos": self._pos.copy(),
+            "slot_rid": [[s, r] for s, r in sorted(self._slot_rid.items())],
+            "resident_order": list(self._resident_order),
+            "density": self._density,
+            "live_bits": self._live_bits,
+            "page_util_sketch": self.page_util_sketch.to_dict(),
+            "peak_page_utilization": self.peak_page_utilization,
+        }
+
+    def _restore_backend(self, b: dict) -> None:
+        from repro.serving.elastic.snapshot import (SnapshotError,
+                                                    leaves_to_tree)
+
+        if int(b["alloc"]["capacity"]) != self.alloc.capacity:
+            raise SnapshotError(
+                f"snapshot has {b['alloc']['capacity']} logical frames, "
+                f"engine has {self.alloc.capacity}")
+        self.store_arrays = leaves_to_tree(self.store_arrays, b["store"],
+                                           "page store")
+        self.state = leaves_to_tree(self.state, b["state"], "slot state")
+        self.alloc._free = [int(f) for f in b["alloc"]["free"]]
+        self.alloc._ref = {int(f): int(n) for f, n in b["alloc"]["ref"]}
+        t = b["table"]
+        self.table.blocks = {int(r): [int(f) for f in fr]
+                             for r, fr in t["blocks"]}
+        self.table._index = {k: int(f) for k, f in t["index"]}
+        self.table._frame_key = {int(f): k for f, k in t["frame_key"]}
+        self.table.prefix_hits = int(t["prefix_hits"])
+        self.table.cow_copies = int(t["cow_copies"])
+        self._pos = np.asarray(b["pos"]).astype(np.int64).copy()
+        self._slot_rid = {int(s): int(r) for s, r in b["slot_rid"]}
+        self._resident_order = [int(s) for s in b["resident_order"]]
+        self._installing = {}
+        self._pending_frame_set = set()
+        self._install_budget = 0
+        self._reserved_frames = 0
+        self._reserved_bits = 0.0
+        self._density = (None if b["density"] is None
+                         else float(b["density"]))
+        self._live_bits = float(b["live_bits"])
+        self.page_util_sketch = QuantileSketch.from_dict(
+            b["page_util_sketch"])
+        self.peak_page_utilization = float(b["peak_page_utilization"])
 
     # -- invariants / reporting ----------------------------------------------
 

@@ -1,120 +1,26 @@
 """Page-aware scheduler: FCFS admission gated by page feasibility, plus
 the preempt/resume lifecycle the spill path needs.
 
-Extends :class:`repro.serving.scheduler.SlotScheduler` — the base
-invariants (no slot leak, no double-book, FCFS) still hold and are still
-checked; the additions are
-
-  * *gated* admission: a request is admitted only when the page gate
-    accepts it, with strict head-of-line blocking (a blocked head stalls
-    everything behind it — no small-request overtaking, so a large
-    request can never starve);
-  * *preemption*: a spilled request leaves its slot without retiring —
-    its tokens-so-far and an opaque engine payload (the exact packed
-    page bits) park in a resume queue that drains, oldest first, ahead
-    of new admissions;
-  * per-tick token recording for a *subset* of active slots (requests
-    still installing pages don't decode this tick).
-
-Like the base class: pure python, no jax, property-tested directly.
+The machinery (gated admission with strict head-of-line blocking,
+preemption into a resume queue, subset token recording) moved into the
+base :class:`repro.serving.scheduler.SlotScheduler` when spring-survive
+made it load-bearing for *both* backends (monolithic rescale/restore
+spills too — DESIGN.md §13).  This subclass survives as the historical
+name plus the ``admit_paged`` spelling the paged engine/tests use.
 """
 
 from __future__ import annotations
 
-import bisect
-import dataclasses
-from typing import Any, Callable, Optional
-
-from repro.serving.request import Request
-from repro.serving.scheduler import RequestTracker, SlotScheduler
-
-
-@dataclasses.dataclass
-class SpilledRequest:
-    """A preempted in-flight request: everything needed to resume it
-    bit-identically (the engine owns the payload's meaning)."""
-
-    req: Request
-    tokens: list
-    payload: Any  # engine-side: packed page bits + pos + next token
+from repro.serving.scheduler import (  # noqa: F401  (re-export)
+    RequestTracker,
+    ShedPolicy,
+    SlotScheduler,
+    SpilledRequest,
+)
 
 
 class PagedScheduler(SlotScheduler):
     """FCFS over slots *and* pages; preempted requests resume first."""
 
-    def __init__(self, n_slots: int):
-        super().__init__(n_slots)
-        self._spilled: list[SpilledRequest] = []  # oldest (lowest rid) first
-        self.n_spills = 0
-        self.n_resumes = 0
-
-    # -- state views --------------------------------------------------------
-
-    def has_work(self) -> bool:
-        return bool(self._spilled) or super().has_work()
-
-    @property
-    def spilled(self) -> int:
-        return len(self._spilled)
-
-    # -- gated admission ----------------------------------------------------
-
-    def admit_paged(
-        self,
-        can_resume: Callable[[SpilledRequest], bool],
-        can_admit: Callable[[Request], bool],
-    ) -> list[tuple[RequestTracker, Optional[SpilledRequest]]]:
-        """Fill free slots: spilled requests first (oldest first), then
-        the FCFS queue, each gated by the caller's page feasibility check.
-        Head-of-line blocking is strict in both queues *and* across them:
-        a blocked spilled head stalls new admissions too, so the spill
-        path can never be starved by a stream of small requests."""
-        out: list[tuple[RequestTracker, Optional[SpilledRequest]]] = []
-        while self._free and self._spilled:
-            if not can_resume(self._spilled[0]):
-                return out
-            spilled = self._spilled.pop(0)
-            slot = self._free.pop(0)
-            tracker = RequestTracker(spilled.req, slot)
-            tracker.tokens = list(spilled.tokens)
-            self.active[slot] = tracker
-            self.n_resumes += 1
-            # no admission_log append: the rid was logged when first
-            # admitted (the FCFS seal tracks first admissions only)
-            out.append((tracker, spilled))
-        while self._free and self._queue:
-            if not can_admit(self._queue[0]):
-                return out
-            slot = self._free.pop(0)
-            req = self._queue.popleft()
-            tracker = RequestTracker(req, slot)
-            self.active[slot] = tracker
-            self.admission_log.append(req.rid)
-            out.append((tracker, None))
-        return out
-
-    # -- preemption ---------------------------------------------------------
-
-    def preempt(self, slot: int, payload: Any) -> SpilledRequest:
-        """Evict the request in ``slot`` without retiring it: the slot
-        frees immediately, the request parks in the resume queue (kept in
-        rid order — original FCFS order among spilled requests)."""
-        tracker = self.active.pop(slot)
-        bisect.insort(self._free, slot)
-        spilled = SpilledRequest(req=tracker.req, tokens=list(tracker.tokens),
-                                 payload=payload)
-        bisect.insort(self._spilled, spilled, key=lambda s: s.req.rid)
-        self.n_spills += 1
-        return spilled
-
-    # -- decode-tick token recording ---------------------------------------
-
-    def record_tokens(self, token_by_slot: dict) -> list[RequestTracker]:
-        """Like the base class, but only for the slots present in
-        ``token_by_slot`` — slots still installing prompt pages get no
-        token this tick."""
-        done = []
-        for slot in sorted(token_by_slot):
-            if self.active[slot].append(int(token_by_slot[slot])):
-                done.append(self.retire(slot))
-        return done
+    #: historical spelling of the gated admission entry point
+    admit_paged = SlotScheduler.admit_gated

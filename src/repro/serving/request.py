@@ -26,12 +26,24 @@ class Request:
     seed: int = 0
     #: optional VLM prefix embeddings, (P, d_model) — threaded to prefill
     img_embeds: Optional[Any] = None
+    #: priority class (higher = more important).  With a priority-aware
+    #: ShedPolicy, admission pops higher classes first and a shrinking
+    #: pool evicts lower classes to the spill path first; otherwise
+    #: recorded but inert (admission stays FCFS).
+    priority: int = 0
+    #: admission deadline in scheduler ticks from submission: still
+    #: queued after this many ticks -> typed-rejected ("deadline").
+    #: None defers to the policy-level default (ShedPolicy.deadline_ticks).
+    deadline_ticks: Optional[int] = None
 
     def __post_init__(self):
         if self.max_tokens <= 0:
             raise ValueError(f"request {self.rid}: max_tokens must be >= 1")
         if len(self.prompt) == 0:
             raise ValueError(f"request {self.rid}: empty prompt")
+        if self.deadline_ticks is not None and self.deadline_ticks < 0:
+            raise ValueError(
+                f"request {self.rid}: deadline_ticks must be >= 0")
 
 
 @dataclasses.dataclass
@@ -52,7 +64,18 @@ class RequestResult:
     first_token_tick: int = -1
     finish_tick: int = -1
     slot: int = -1
-    finished_by: str = "max_tokens"  # "eos" | "max_tokens"
+    finished_by: str = "max_tokens"  # "eos" | "max_tokens" | "rejected"
+    #: typed rejection reason ("queue_full" | "deadline") — None when the
+    #: request was (or will be) served.  A rejected request has no tokens
+    #: and its finished_by is "rejected"; nothing is ever dropped without
+    #: one of these two markers (the spring-survive no-silent-loss seal).
+    rejected: Optional[str] = None
+
+    @property
+    def status(self) -> str:
+        if self.rejected is not None:
+            return "rejected"
+        return "completed" if self.finish_tick >= 0 else "pending"
 
     @property
     def latency_s(self) -> float:

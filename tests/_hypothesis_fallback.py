@@ -4,7 +4,8 @@ not installed (the CPU test container ships without it).
 Only the surface this suite uses is provided: ``given`` (positional and
 keyword forms), ``settings`` (profile registration + decorator no-op),
 ``HealthCheck``, and the strategies ``integers`` / ``floats`` /
-``lists`` / ``tuples`` / ``sampled_from`` / ``data``.
+``lists`` / ``tuples`` / ``sampled_from`` / ``data`` / ``booleans`` /
+``just`` / ``one_of``.
 ``@given`` tests run a fixed number of pseudo-random examples drawn from a
 per-test seeded RNG, so failures reproduce exactly across runs.  With the
 real hypothesis installed this module is never imported (see conftest.py).
@@ -71,6 +72,22 @@ def floats(min_value: float, max_value: float, allow_nan: bool = False,
 def sampled_from(options) -> _Strategy:
     opts = list(options)
     return _Strategy(lambda rng: rng.choice(opts))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def one_of(*strategies) -> _Strategy:
+    opts = list(strategies[0]) if (len(strategies) == 1
+                                   and isinstance(strategies[0],
+                                                  (list, tuple))) else list(
+        strategies)
+    return _Strategy(lambda rng: rng.choice(opts).example(rng))
 
 
 def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
@@ -155,7 +172,7 @@ def install() -> None:
     mod.HealthCheck = HealthCheck
     strat = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "lists", "tuples", "sampled_from",
-                 "data"):
+                 "data", "booleans", "just", "one_of"):
         setattr(strat, name, globals()[name])
     mod.strategies = strat
     sys.modules["hypothesis"] = mod

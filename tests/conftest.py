@@ -60,6 +60,11 @@ def pytest_configure(config):
         "paging: spring-pages paged/COW KV pool parity + property suite "
         "(CI paging job runs `pytest -m paging`)",
     )
+    config.addinivalue_line(
+        "markers",
+        "elastic: spring-survive chaos/snapshot/shed suite "
+        "(CI elastic job runs `pytest -m elastic`)",
+    )
 
 
 @pytest.fixture(autouse=True)

@@ -1,0 +1,471 @@
+"""spring-survive seal (ISSUE 9): elastic serving under failure/overload.
+
+Three layers:
+
+  * pure-python scheduler properties (no jax): load shedding, admission
+    deadlines, priority/EDF ordering, preempt/resume, and the
+    no-silent-loss conservation law — every submitted request ends
+    either completed or typed-rejected;
+  * engine snapshot/restore: versioned, spec-hash-stamped artifacts that
+    round-trip the packed KV pool bits byte-exactly across all numerics
+    modes x both pool backends, and restore to emit the exact remaining
+    tokens of every in-flight request;
+  * chaos: hypothesis drives kill/rewind/roundtrip/rescale schedules at
+    arbitrary tick boundaries against the uninterrupted oracle.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.serving.elastic import (ChaosEvent, ChaosHarness, SnapshotError,
+                                   load_snapshot, save_snapshot)
+from repro.serving.request import Request
+from repro.serving.scheduler import (REJECT_DEADLINE, REJECT_QUEUE_FULL,
+                                     ShedPolicy, SlotScheduler)
+
+pytestmark = pytest.mark.elastic
+
+ARCH = "llama3.2-1b"
+PROMPT, GEN, MAX_LEN = 8, 4, 64
+N_PROMPTS = 3
+
+
+# -- pure-python scheduler properties (no jax) -------------------------------
+
+
+def _req(rid, *, prio=0, deadline=None, max_tokens=3, prompt=(1, 2, 3)):
+    return Request(rid=rid, prompt=tuple(prompt), max_tokens=max_tokens,
+                   priority=prio, deadline_ticks=deadline)
+
+
+def _drain(sched, tick0=0, max_ticks=500):
+    """Run the scheduler alone (one token per active slot per tick) until
+    dry; returns (completed rids, ticks used)."""
+    done, tick = [], tick0
+    while sched.has_work():
+        for req, _ in sched.shed_expired(tick):
+            pass
+        sched.admit_gated(lambda s: True, lambda r: True)
+        toks = {slot: 7 for slot in sched.active}
+        done += [t.req.rid for t in sched.record_tokens(toks)]
+        sched.check_invariants()
+        tick += 1
+        assert tick - tick0 < max_ticks, "scheduler did not drain"
+    return done, tick - tick0
+
+
+@given(st.data())
+def test_shed_scheduler_conserves_every_request(data):
+    """No silent loss under any policy: every submitted rid is either
+    completed or typed-rejected, and invariants hold every tick."""
+    policy = ShedPolicy(
+        max_queue_depth=data.draw(st.one_of(st.just(None),
+                                            st.integers(1, 3))),
+        deadline_ticks=data.draw(st.one_of(st.just(None),
+                                           st.integers(0, 4))),
+        deadline_aware=data.draw(st.booleans()),
+        priority_aware=data.draw(st.booleans()))
+    sched = SlotScheduler(data.draw(st.integers(1, 3)), policy=policy)
+    n_req = data.draw(st.integers(1, 10))
+    arrivals = sorted(data.draw(st.integers(0, 6)) for _ in range(n_req))
+    completed, rejected, tick, rid = [], [], 0, 0
+    while sched.has_work() or rid < n_req:
+        for req, reason in sched.shed_expired(tick):
+            rejected.append((req.rid, reason))
+        while rid < n_req and arrivals[rid] <= tick:
+            req = _req(rid, prio=data.draw(st.integers(0, 2)),
+                       deadline=data.draw(st.one_of(st.just(None),
+                                                    st.integers(0, 3))),
+                       max_tokens=data.draw(st.integers(1, 4)))
+            reason = sched.submit(req, tick=tick)
+            if reason is not None:
+                rejected.append((rid, reason))
+            rid += 1
+        sched.admit_gated(lambda s: True, lambda r: True)
+        completed += [t.req.rid
+                      for t in sched.record_tokens(
+                          {slot: 7 for slot in sched.active})]
+        sched.check_invariants()
+        tick += 1
+        assert tick < 500
+    assert sorted(completed + [r for r, _ in rejected]) == list(range(n_req))
+    assert sched.shed_log == rejected
+    for _, reason in rejected:
+        assert reason in (REJECT_QUEUE_FULL, REJECT_DEADLINE)
+
+
+def test_queue_depth_shed_is_typed_and_fcfs_kept():
+    sched = SlotScheduler(1, policy=ShedPolicy(max_queue_depth=2))
+    assert sched.submit(_req(0)) is None
+    assert sched.submit(_req(1)) is None
+    assert sched.submit(_req(2)) == REJECT_QUEUE_FULL  # depth 2 reached
+    done, _ = _drain(sched)
+    assert done == [0, 1]
+    assert sched.shed_log == [(2, REJECT_QUEUE_FULL)]
+
+
+def test_deadline_shed_uses_request_override():
+    sched = SlotScheduler(1, policy=ShedPolicy(deadline_ticks=10))
+    sched.submit(_req(0, max_tokens=4), tick=0)  # occupies the slot
+    sched.submit(_req(1, deadline=1), tick=0)  # per-request: expires first
+    sched.submit(_req(2), tick=0)  # policy default 10: survives
+    done, _ = _drain(sched)
+    assert done == [0, 2]
+    assert sched.shed_log == [(1, REJECT_DEADLINE)]
+
+
+def test_priority_aware_admission_order():
+    sched = SlotScheduler(1, policy=ShedPolicy(priority_aware=True))
+    for rid, prio in [(0, 0), (1, 2), (2, 1), (3, 2)]:
+        sched.submit(_req(rid, prio=prio, max_tokens=1))
+    done, _ = _drain(sched)
+    # priority desc, FCFS within a class
+    assert done == [1, 3, 2, 0]
+
+
+def test_deadline_aware_admission_is_edf():
+    sched = SlotScheduler(1, policy=ShedPolicy(deadline_aware=True))
+    for rid, dl in [(0, None), (1, 9), (2, 5)]:
+        sched.submit(_req(rid, deadline=dl, max_tokens=1), tick=0)
+    done, _ = _drain(sched)
+    assert done == [2, 1, 0]  # earliest deadline first, None last
+
+
+def test_preempt_resume_order_and_counters():
+    sched = SlotScheduler(2)
+    for rid, prio in [(0, 0), (1, 5), (2, 0)]:
+        sched.submit(_req(rid, prio=prio, max_tokens=2))
+    sched.admit_gated(lambda s: True, lambda r: True)  # 0, 1 in slots
+    sched.record_tokens({s: 7 for s in sched.active})
+    sched.preempt(0, payload="p0")  # rid 0
+    sched.preempt(1, payload="p1")  # rid 1 (higher priority)
+    assert sched.n_spills == 2 and sched.spilled == 2
+    got = sched.admit_gated(lambda s: True, lambda r: True)
+    # resumes fill the pool first (priority order: rid 1 before rid 0);
+    # rid 2 waits — resumed trackers keep their emitted tokens
+    assert [(t.req.rid, s is not None) for t, s in got] == [
+        (1, True), (0, True)]
+    assert got[0][0].tokens == [7] and got[0][1].payload == "p1"
+    assert sched.n_resumes == 2
+    sched.check_invariants()
+    # a completion frees a slot, then the queued rid admits fresh
+    sched.record_tokens({s: 7 for s in sched.active})  # rid 0/1 finish
+    got = sched.admit_gated(lambda s: True, lambda r: True)
+    assert [(t.req.rid, s) for t, s in got] == [(2, None)]
+    sched.check_invariants()
+
+
+def test_blocked_spill_head_stalls_new_admissions():
+    sched = SlotScheduler(2)
+    sched.submit(_req(0, max_tokens=2))
+    sched.submit(_req(1, max_tokens=1))
+    sched.admit_gated(lambda s: True, lambda r: True)
+    sched.preempt(0, payload="x")
+    # spilled head infeasible -> strict head-of-line: queue must not jump it
+    got = sched.admit_gated(lambda s: False, lambda r: True)
+    assert got == [] and sched.pending == 0  # rid 1 already active
+    sched.submit(_req(2, max_tokens=1))
+    assert sched.admit_gated(lambda s: False, lambda r: True) == []
+    sched.check_invariants()
+
+
+def test_rescale_requires_drained_pool():
+    sched = SlotScheduler(2)
+    sched.submit(_req(0))
+    sched.admit_gated(lambda s: True, lambda r: True)
+    with pytest.raises(AssertionError):
+        sched.rescale(4)
+    sched.preempt(0, payload=None)
+    sched.rescale(4)
+    assert sched.n_slots == 4 and sched.free_slots == 4
+    done, _ = _drain(sched)
+    assert done == [0]
+
+
+# -- engine fixtures: one cached engine per (mode, backend) ------------------
+
+
+_ENGINES: dict = {}
+
+
+def _build_engine(mode, backend, *, n_slots=2, greedy=True, shed=None,
+                  spec_hash="feedbeefcafe0123"):
+    import jax
+
+    from repro.configs import get_arch
+    from repro.launch.serve import serving_config
+    from repro.models.lm import lm_init
+    from repro.optim.optimizers import OptimizerConfig
+    from repro.runtime.train import StepConfig
+    from repro.serving.engine import ServingEngine
+    from repro.serving.paging.engine import PagedServingEngine
+
+    view = get_arch(ARCH).view(reduced=True)
+    step_cfg = StepConfig(spring=serving_config(mode),
+                          optimizer=OptimizerConfig())
+    params = lm_init(jax.random.PRNGKey(0), view.config)
+    kw = dict(params=params, n_slots=n_slots, max_len=MAX_LEN,
+              greedy=greedy, spec_hash=spec_hash, shed=shed)
+    if backend == "paged":
+        return PagedServingEngine(view, step_cfg, page_tokens=8, **kw)
+    return ServingEngine(view, step_cfg, **kw)
+
+
+def _prompts(vocab):
+    import jax
+
+    key = jax.random.PRNGKey(3)
+    return [[int(t) for t in jax.random.randint(
+        jax.random.fold_in(key, i), (PROMPT + i,), 0, vocab)]
+        for i in range(N_PROMPTS)]
+
+
+def get_engine(mode, backend, greedy=True):
+    """Cached (engine, post-submit snapshot, oracle tokens): restoring
+    the snapshot rewinds the engine to the pristine just-submitted state,
+    so every test/example replays the same workload without recompiling.
+    The oracle is the uninterrupted run's per-request token lists."""
+    key = (mode, backend, greedy)
+    if key not in _ENGINES:
+        eng = _build_engine(mode, backend, greedy=greedy)
+        for i, p in enumerate(_prompts(eng.cfg.vocab)):
+            eng.submit_prompt(p, GEN, seed=100 + i)
+        snap0 = eng.snapshot()
+        out = eng.run()
+        oracle = [r["tokens"] for r in out["per_request"]]
+        assert all(len(t) == GEN for t in oracle)
+        _ENGINES[key] = (eng, snap0, oracle)
+    return _ENGINES[key]
+
+
+def _tokens(out):
+    return [r["tokens"] for r in sorted(out["per_request"],
+                                        key=lambda r: r["rid"])]
+
+
+# -- snapshot round-trip: all modes x both backends --------------------------
+
+
+@pytest.mark.parametrize("backend", ["monolithic", "paged"])
+@pytest.mark.parametrize("mode", ["dense", "quant", "quant_sparse"])
+def test_snapshot_roundtrip_bit_exact(mode, backend, tmp_path):
+    """Mid-run snapshot -> .npz -> load: every packed pool array is
+    byte-identical, and the restored engine finishes with the oracle's
+    exact tokens."""
+    eng, snap0, oracle = get_engine(mode, backend)
+    eng.restore(snap0)
+    for _ in range(3):
+        eng.step()
+    snap = eng.snapshot()
+    path = str(tmp_path / "snap.npz")
+    save_snapshot(snap, path)
+    loaded = load_snapshot(path)
+    bits_key = "pool" if backend == "monolithic" else "store"
+    assert len(snap["backend"][bits_key]) == len(loaded["backend"][bits_key])
+    for a, b in zip(snap["backend"][bits_key], loaded["backend"][bits_key]):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert a.tobytes() == b.tobytes()
+    assert loaded["spec_hash"] == eng.spec_hash
+    assert loaded["kind"] == eng.backend_kind
+    eng.restore(loaded)
+    assert _tokens(eng.run()) == oracle
+
+
+def test_restore_into_fresh_engine_exact_remaining_tokens():
+    """True process death: a cold engine restores a mid-run snapshot and
+    emits the exact remaining tokens of every in-flight request."""
+    eng, snap0, oracle = get_engine("dense", "monolithic")
+    eng.restore(snap0)
+    for _ in range(4):
+        eng.step()
+    snap = eng.snapshot()
+    fresh = _build_engine("dense", "monolithic")
+    fresh.restore(snap)
+    assert fresh.tick == eng.tick and fresh.decode_steps == eng.decode_steps
+    assert _tokens(fresh.run()) == oracle
+
+
+def test_sampled_decode_keys_survive_restore():
+    """Per-request sampling keys (seed + draw index) are part of the
+    snapshot: a sampled (non-greedy) run restored mid-flight emits the
+    same tokens as the uninterrupted sampled run."""
+    eng, snap0, oracle = get_engine("dense", "monolithic", greedy=False)
+    eng.restore(snap0)
+    for _ in range(3):
+        eng.step()
+    eng.restore(eng.snapshot())
+    assert _tokens(eng.run()) == oracle
+
+
+# -- restore rejection: wrong hash / kind / version --------------------------
+
+
+def test_restore_under_wrong_spec_hash_rejected():
+    eng, snap0, _ = get_engine("dense", "monolithic")
+    bad = dict(snap0)
+    bad["spec_hash"] = "0" * 16
+    with pytest.raises(SnapshotError, match="spec_hash"):
+        eng.restore(bad)
+    # None on either side means "unstamped": restore is allowed
+    unstamped = dict(snap0)
+    unstamped["spec_hash"] = None
+    eng.restore(unstamped)
+    assert _tokens(eng.run()) == get_engine("dense", "monolithic")[2]
+
+
+def test_restore_wrong_backend_kind_and_version_rejected():
+    eng, snap0, _ = get_engine("dense", "monolithic")
+    wrong_kind = dict(snap0)
+    wrong_kind["kind"] = "paged"
+    with pytest.raises(SnapshotError, match="pool"):
+        eng.restore(wrong_kind)
+    wrong_ver = dict(snap0)
+    wrong_ver["version"] = 999
+    with pytest.raises(SnapshotError, match="version"):
+        eng.restore(wrong_ver)
+    with pytest.raises(SnapshotError, match="version"):
+        eng.restore({"not": "a snapshot"})
+
+
+def test_restore_structural_mismatch_rejected():
+    eng, snap0, _ = get_engine("dense", "monolithic")
+    bad = dict(snap0)
+    bad["signature"] = dict(snap0["signature"], max_len=MAX_LEN * 2)
+    with pytest.raises(SnapshotError, match="max_len"):
+        eng.restore(bad)
+
+
+# -- live rescaling ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["monolithic", "paged"])
+def test_rescale_grow_and_shrink_keeps_every_request(backend):
+    """Shrink below occupancy (spill path), then grow back: nothing is
+    dropped and every token matches the oracle."""
+    eng, snap0, oracle = get_engine("quant_sparse", backend)
+    eng.restore(snap0)
+    for _ in range(2):
+        eng.step()
+    eng.rescale(1)  # below occupancy: actives spill
+    assert eng.sched.n_spills >= 1
+    for _ in range(2):
+        eng.step()
+    eng.rescale(3)
+    out = eng.run()
+    assert _tokens(out) == oracle
+    assert out["elastic"]["n_rescales"] == 2
+    assert out["elastic"]["n_resumes"] == out["elastic"]["n_spills"]
+
+
+def test_paged_rescale_infeasible_page_budget_rejected():
+    eng, snap0, oracle = get_engine("quant_sparse", "paged")
+    eng.restore(snap0)
+    eng.step()
+    with pytest.raises(ValueError, match="pages"):
+        eng.rescale(num_pages=1)
+    # rejected before any mutation: the run still completes exactly
+    assert _tokens(eng.run()) == oracle
+
+
+# -- chaos: arbitrary failure schedules vs the static oracle ------------------
+
+
+def _draw_events(data, *, paged):
+    events = []
+    for _ in range(data.draw(st.integers(0, 4), label="n_events")):
+        at = data.draw(st.integers(0, 12), label="at")
+        kind = data.draw(st.sampled_from(ChaosEvent.KINDS), label="kind")
+        if kind == "rescale":
+            slots = data.draw(st.integers(1, 4), label="slots")
+            pages = (data.draw(st.sampled_from([None, 8, 12, 16]),
+                               label="pages") if paged else None)
+            events.append(ChaosEvent(at, kind, slots=slots, num_pages=pages))
+        else:
+            events.append(ChaosEvent(at, kind))
+    return events
+
+
+@pytest.mark.parametrize("backend", ["monolithic", "paged"])
+@pytest.mark.parametrize("mode", ["dense", "quant", "quant_sparse"])
+def test_chaos_fixed_schedule_every_mode(mode, backend):
+    """The acceptance matrix: one kill/rewind/roundtrip/rescale schedule
+    on every (numerics mode x pool backend), bit-identical to the
+    uninterrupted oracle."""
+    eng, snap0, oracle = get_engine(mode, backend)
+    eng.restore(snap0)
+    events = [ChaosEvent(1, "snapshot"), ChaosEvent(2, "kill"),
+              ChaosEvent(3, "rewind"), ChaosEvent(4, "roundtrip"),
+              ChaosEvent(5, "rescale", slots=3)]
+    out = ChaosHarness(eng, events, max_steps=500).run()
+    assert _tokens(out) == oracle
+    assert out["finite"]
+
+
+@given(st.data())
+def test_chaos_monolithic_matches_oracle(data):
+    eng, snap0, oracle = get_engine("quant_sparse", "monolithic")
+    eng.restore(snap0)
+    harness = ChaosHarness(eng, _draw_events(data, paged=False),
+                           max_steps=500)
+    out = harness.run()
+    assert _tokens(out) == oracle
+    assert out["finite"]
+
+
+@given(st.data())
+def test_chaos_paged_matches_oracle(data):
+    eng, snap0, oracle = get_engine("quant_sparse", "paged")
+    eng.restore(snap0)
+    harness = ChaosHarness(eng, _draw_events(data, paged=True),
+                           max_steps=500)
+    out = harness.run()
+    assert _tokens(out) == oracle
+    assert out["finite"]
+
+
+# -- engine-level shedding + periodic snapshots ------------------------------
+
+
+def test_engine_typed_rejections_no_silent_loss():
+    """An overloaded engine completes or typed-rejects every request —
+    and the rejection reason lands in the per-request results."""
+    eng = _build_engine("dense", "monolithic", n_slots=1,
+                        shed=ShedPolicy(max_queue_depth=1))
+    for i, p in enumerate(_prompts(eng.cfg.vocab)):
+        eng.submit_prompt(p, GEN, seed=100 + i)
+    out = eng.run()
+    rows = {r["rid"]: r for r in out["per_request"]}
+    assert len(rows) == N_PROMPTS
+    completed = [r for r in rows.values() if r["status"] == "completed"]
+    rejected = [r for r in rows.values() if r["status"] == "rejected"]
+    assert len(completed) + len(rejected) == N_PROMPTS
+    assert rejected and all(r["rejected"] == REJECT_QUEUE_FULL
+                            and r["finished_by"] == "rejected"
+                            and r["tokens"] == [] for r in rejected)
+    assert out["elastic"]["rejected"] == {
+        REJECT_QUEUE_FULL: len(rejected)}
+    # completed requests are unaffected by the shedding around them
+    oracle = get_engine("dense", "monolithic")[2]
+    for r in completed:
+        assert r["tokens"] == oracle[r["rid"]]
+
+
+def test_periodic_snapshots_and_restore_file(tmp_path):
+    eng, snap0, oracle = get_engine("dense", "monolithic")
+    eng.restore(snap0)
+    path = str(tmp_path / "auto.npz")
+    eng.snapshot_every, eng.snapshot_path = 2, path
+    ticks_before = len(eng.watchdog.events)
+    try:
+        out = eng.run()
+    finally:
+        eng.snapshot_every, eng.snapshot_path = 0, ""
+    assert _tokens(out) == oracle
+    assert out["elastic"]["n_snapshots"] >= 1
+    # the watchdog observed every tick of the run
+    assert len(eng.watchdog.events) - ticks_before == out["latency"]["ticks"]
+    # the on-disk artifact restores (here: some suffix of the run)
+    eng.restore_file(path)
+    assert _tokens(eng.run()) == oracle

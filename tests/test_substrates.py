@@ -165,6 +165,55 @@ def test_watchdog_flags_stragglers():
     assert events == ["boom"]
 
 
+def test_watchdog_step_end_without_start_raises():
+    """Regression: step_end() before step_start() used to die with a
+    bare TypeError from ``time.monotonic() - None``."""
+    w = StragglerWatchdog()
+    with pytest.raises(RuntimeError, match="without a matching step_start"):
+        w.step_end(0)
+    # a completed pair consumes the start: doubling step_end is the same bug
+    w.step_start()
+    w.step_end(0)
+    with pytest.raises(RuntimeError, match="without a matching step_start"):
+        w.step_end(1)
+
+
+def _timed_steps(w, durations):
+    """Drive the watchdog with exact synthetic durations (rewind _t0 so
+    wall-clock jitter cannot flake the assertions)."""
+    import time
+
+    for i, dt in enumerate(durations):
+        w.step_start()
+        w._t0 = time.monotonic() - dt
+        w.step_end(i)
+
+
+def test_watchdog_warmup_suppresses_early_flags():
+    w = StragglerWatchdog(threshold=2.0, warmup_steps=3)
+    # a huge spike inside warmup is absorbed, not flagged
+    _timed_steps(w, [0.01, 0.5, 0.01])
+    assert not any(ev.slow for ev in w.events)
+    # past warmup the same spike flags
+    _timed_steps(w, [0.01, 0.5])
+    assert w.events[-1].slow
+
+
+def test_watchdog_escalates_after_consecutive_slow_then_resets():
+    fired = []
+    w = StragglerWatchdog(threshold=2.0, escalate_after=3, warmup_steps=0,
+                          on_escalate=lambda: fired.append(True))
+    _timed_steps(w, [0.01, 0.01])  # baseline
+    _timed_steps(w, [0.2, 0.2])  # two slow: below the escalation bar
+    assert not fired and w.consecutive_slow == 2
+    _timed_steps(w, [0.01])  # a fast step resets the streak
+    assert w.consecutive_slow == 0
+    _timed_steps(w, [0.2, 0.2, 0.2])  # three consecutive -> escalate
+    assert fired and w.consecutive_slow == 3
+    # slow steps never poison the EWMA baseline
+    assert w.ewma < 0.05
+
+
 @given(st.integers(1, 4096))
 def test_elastic_mesh_policy_covers_any_device_count(n):
     choice = ElasticMeshPolicy(model_parallel=16, prefer_pods=2).choose(n)
@@ -173,6 +222,21 @@ def test_elastic_mesh_policy_covers_any_device_count(n):
         total *= d
     assert total <= n and total >= max(1, n // 2)  # uses most of the fleet
     assert len(choice.shape) == len(choice.axes)
+
+
+def test_elastic_mesh_policy_degrades_tp_for_awkward_counts():
+    """Non-power-of-two survivor counts: TP halves until it divides."""
+    pol = ElasticMeshPolicy(model_parallel=16, prefer_pods=2)
+    # 24 devices cannot host TP=16 -> degrade to 8, data=3 (3 odd: 1 pod)
+    assert pol.choose(24).shape == (3, 8)
+    assert pol.choose(24).axes == ("data", "model")
+    # prime count: TP degrades all the way to 1
+    assert pol.choose(7).shape == (7, 1)
+    # clean power of two keeps full TP and splits pods
+    assert pol.choose(64).shape == (2, 2, 16)
+    assert pol.choose(64).axes == ("pod", "data", "model")
+    # single device: the degenerate 1x1 mesh
+    assert pol.choose(1).shape == (1, 1)
 
 
 # -- sharding rules -----------------------------------------------------------
