@@ -1,0 +1,114 @@
+"""Packed-collective microbenches: wire compression + bit-identity of the
+spring-mesh ``packed_all_gather`` / ``packed_reduce_scatter`` op families
+(simulation mode — the registry lowering the sharded sessions jit, minus
+the device wire hop).
+
+Rows:
+  collective_ag_dNN   us = jitted sim-mode packed_all_gather (world 4,
+                      64K elems/device at NN% density); derived = dense
+                      fp32 bytes / packed wire bytes at the ``20·d + 1``
+                      accounting.
+  collective_rs_dNN   us = jitted sim-mode packed_reduce_scatter;
+                      derived = max |packed - dense reference| over the
+                      scattered shards (must be 0: bit-exact).
+  collective_formula_d50  derived = measured wire bytes / analytical
+                      formula (= 1.0 at word alignment).
+
+``--smoke`` (the CI mesh job) gates the packed wire bytes at >= 2x under
+dense fp32 at ReLU density (0.5) and re-asserts per-shard bit-identity
+of packed vs dense collectives for every selectable impl.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.collectives import (
+    collective_probe,
+    dense_all_gather,
+    dense_reduce_scatter,
+    packed_all_gather,
+    packed_reduce_scatter,
+    _shard_block,
+)
+from repro.kernels import registry
+
+WORLD = 4
+LENGTH = 1 << 16
+
+
+def _time(fn, *args, iters: int = 20) -> float:
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def rows() -> list[tuple]:
+    registry.ensure_registered()
+    impl = registry.resolve("packed_all_gather", None, _count=False).name
+    ag = jax.jit(lambda x: packed_all_gather(x))
+    rs = jax.jit(lambda x: packed_reduce_scatter(x))
+    out = []
+    for density in (0.1, 0.5, 0.9):
+        x = _shard_block(int(density * 100), WORLD, LENGTH, density)
+        probe = collective_probe(density, world=WORLD, length=LENGTH)
+        out.append((f"collective_ag_d{int(density*100)}", _time(ag, x),
+                    probe["compression_vs_fp32"], impl))
+        err = float(jnp.max(jnp.abs(rs(x) - dense_reduce_scatter(x))))
+        out.append((f"collective_rs_d{int(density*100)}", _time(rs, x),
+                    err, impl))
+    p50 = collective_probe(0.5, world=WORLD, length=LENGTH)
+    out.append(("collective_formula_d50", 0.0, p50["wire_vs_formula"], impl))
+    return out
+
+
+def smoke() -> int:
+    """CI gate: >= 2x packed-vs-dense-fp32 wire bytes at ReLU density,
+    per-shard bit-identity of packed vs dense collectives on every
+    selectable impl, and the 20·d+1 formula cross-check."""
+    registry.ensure_registered()
+    failures = []
+    probe = collective_probe(0.5, world=WORLD, length=LENGTH)
+    if probe["compression_vs_fp32"] < 2.0:
+        failures.append(
+            f"packed wire bytes only {probe['compression_vs_fp32']:.2f}x "
+            f"under dense fp32 at density {probe['density']:.2f} (< 2x)")
+    if abs(probe["wire_vs_formula"] - 1.0) > 1e-6:
+        failures.append(
+            f"wire/formula ratio {probe['wire_vs_formula']:.6f} != 1.0 "
+            "(payload not word-aligned or accounting drifted)")
+    if not probe["exact"]:
+        failures.append("packed all-gather round trip not bit-exact")
+    for impl in ("ref", "jnp"):
+        for density in (1.0, 0.5, 0.1):
+            x = _shard_block(7, WORLD, LENGTH, density)
+            if not jnp.array_equal(packed_all_gather(x, impl=impl),
+                                   dense_all_gather(x)):
+                failures.append(f"all_gather[{impl}] d={density} != dense")
+            if not jnp.array_equal(packed_reduce_scatter(x, impl=impl),
+                                   dense_reduce_scatter(x)):
+                failures.append(f"reduce_scatter[{impl}] d={density} != dense")
+    print("name,us_per_call,derived,impl")
+    for name, us, derived, impl in rows():
+        print(f"{name},{us:.2f},{derived:.6g},{impl}")
+    for f in failures:
+        print(f"COLLECTIVES SMOKE FAILURE: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main() -> None:
+    if "--smoke" in sys.argv:
+        sys.exit(smoke())
+    print("name,us_per_call,derived,impl")
+    for name, us, derived, impl in rows():
+        print(f"{name},{us:.2f},{derived:.6g},{impl}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,8 @@
   bench_memstash      compressed activation stash: ratio/throughput vs
                       sparsity + formula cross-check + grad overhead
   bench_kernels       kernel-registry-dispatched microbenches
+  bench_collectives   spring-mesh packed collectives: wire compression
+                      + packed-vs-dense bit-identity
   bench_serving       continuous-batching engine throughput + KV wire
   bench_paging        spring-pages concurrent capacity vs the monolithic
                       pool at equal physical page bytes
@@ -47,6 +49,7 @@ def main() -> None:
     skip_slow = args.skip_slow
     json_path = args.json
     from benchmarks import (
+        bench_collectives,
         bench_compression,
         bench_elastic,
         bench_kernels,
@@ -59,7 +62,8 @@ def main() -> None:
     )
 
     suites = [bench_table1, bench_paper_figs, bench_compression, bench_memstash,
-              bench_kernels, bench_serving, bench_paging, bench_elastic]
+              bench_kernels, bench_collectives, bench_serving, bench_paging,
+              bench_elastic]
     if not skip_slow:
         suites.append(bench_sr_training)
 

@@ -44,6 +44,10 @@ class Session:
                 f"got run={spec.run!r}")
         self.spec = spec
         self.resolved = spec.resolve()
+        if mesh is None and spec.shape.mesh.explicit:
+            # spring-mesh: an explicit topology in the spec builds its
+            # own mesh (DESIGN.md §14); a caller-passed mesh still wins
+            mesh = build_mesh(spec.shape.mesh)
         self.mesh = mesh
 
     def trace_path(self) -> str:
@@ -117,8 +121,19 @@ class TrainSession(Session):
                 state = TrainState(*tree)
                 log.info("resumed from step %d", start_step)
 
-        step_fn = jax.jit(make_train_step(view, step_cfg, mesh=self.mesh),
-                          donate_argnums=(0,))
+        sharded = spec.shape.mesh.data > 1 and self.mesh is not None
+        if sharded:
+            # spring-mesh: packed-collective data parallelism — gradients
+            # cross the wire binary-mask compressed, losses stay
+            # bit-identical to the single-device oracle (DESIGN.md §14)
+            from repro.dist.train import make_sharded_train_step
+
+            step_fn = jax.jit(
+                make_sharded_train_step(view, step_cfg, self.mesh),
+                donate_argnums=(0,))
+        else:
+            step_fn = jax.jit(make_train_step(view, step_cfg, mesh=self.mesh),
+                              donate_argnums=(0,))
         watchdog = StragglerWatchdog()
         losses = []
         steps = spec.train.steps
@@ -150,13 +165,22 @@ class TrainSession(Session):
         if manager is not None:
             manager.maybe_save(steps, tuple(state.tree_flatten()[0]), meta,
                                force=True)
-        return self._with_payload({
+        out = {
             "first_loss": losses[0] if losses else None,
             "last_loss": losses[-1] if losses else None,
             "losses": losses,
             "slow_steps": sum(1 for e in watchdog.events if e.slow),
             "state": state,
-        })
+            "mesh": spec.shape.mesh.label(),
+        }
+        if sharded:
+            # measured wire accounting of one packed exchange at the
+            # probe density (the jitted path's hooks are trace-inert)
+            from repro.dist.collectives import collective_probe
+
+            out["collective_probe"] = collective_probe(
+                spec.sparsity.probe_density, world=spec.shape.mesh.data)
+        return self._with_payload(out)
 
 
 # -- serving ----------------------------------------------------------------
@@ -217,10 +241,31 @@ class ServeSession(Session):
         params = self.params if self.params is not None else init(key, cfg)
         batch_inputs = synthetic_batch(arch, cfg, batch, prompt_len, key)
 
-        prefill = jax.jit(make_prefill_step(view, step_cfg, mesh=self.mesh,
-                                            reduced=True))
-        decode = jax.jit(make_decode_step(view, step_cfg, mesh=self.mesh,
-                                          reduced=True))
+        sharded = (spec.shape.mesh.data > 1 and self.mesh is not None
+                   and not arch.is_encdec)
+        if sharded and batch % spec.shape.mesh.data:
+            # indivisible request batch: replicate instead of sharding,
+            # and say so through the same fallback counter the logical
+            # rules use (satellite of DESIGN.md §14)
+            from repro.runtime.sharding import note_mesh_fallback
+
+            note_mesh_fallback("serve_batch")
+            sharded = False
+        if sharded:
+            # spring-mesh: rows sharded over the data axis, logits cross
+            # the wire binary-mask packed (DESIGN.md §14)
+            from repro.dist.serve import (make_sharded_decode_step,
+                                          make_sharded_prefill_step)
+
+            prefill = jax.jit(make_sharded_prefill_step(
+                view, step_cfg, self.mesh, reduced=True))
+            decode = jax.jit(make_sharded_decode_step(
+                view, step_cfg, self.mesh, reduced=True))
+        else:
+            prefill = jax.jit(make_prefill_step(view, step_cfg, mesh=self.mesh,
+                                                reduced=True))
+            decode = jax.jit(make_decode_step(view, step_cfg, mesh=self.mesh,
+                                              reduced=True))
 
         t0 = time.monotonic()
         if arch.is_encdec:
@@ -253,14 +298,21 @@ class ServeSession(Session):
         t_decode = time.monotonic() - t0
 
         seqs = jnp.stack(tokens_out, axis=1)
-        return {
+        out = {
             "generated": seqs,
             "prefill_s": t_prefill,
             "decode_s": t_decode,
             "tokens_per_s": batch * gen / t_decode if t_decode else 0.0,
             "finite": bool(jnp.all(jnp.isfinite(logits))),
             "engine": False,
+            "mesh": spec.shape.mesh.label(),
         }
+        if sharded:
+            from repro.dist.collectives import collective_probe
+
+            out["collective_probe"] = collective_probe(
+                spec.sparsity.probe_density, world=spec.shape.mesh.data)
+        return out
 
     def _engine(self) -> dict:
         from repro.serving.engine import ServingEngine
@@ -319,9 +371,18 @@ class ServeSession(Session):
 # -- dryrun -----------------------------------------------------------------
 
 
-def build_mesh(kind: str):
+def build_mesh(mesh):
+    """Mesh from a ``MeshSpec`` (or legacy kind string).  Explicit axis
+    extents take precedence over ``kind`` (DESIGN.md §14)."""
     from repro.launch.mesh import make_debug_mesh, make_production_mesh
 
+    kind = mesh
+    if not isinstance(mesh, str):
+        if mesh.explicit:
+            from repro.dist.mesh import make_explicit_mesh
+
+            return make_explicit_mesh(mesh.pod, mesh.data, mesh.model)
+        kind = mesh.kind
     if kind == "single":
         return make_production_mesh(multi_pod=False)
     if kind == "multi":
@@ -498,24 +559,28 @@ class DryrunSession(Session):
 
         spec, r = self.spec, self.resolved
         arch = self._arch_for_lower()
-        shape_name, mesh_kind, mode = (spec.shape.cell, spec.shape.mesh,
+        shape_name, mesh_spec, mode = (spec.shape.cell, spec.shape.mesh,
                                        spec.numerics.mode)
         sh = SHAPES[shape_name]
         step_cfg = r.step
         kpolicy = r.kernel_policy
         base = {
-            "arch": spec.arch.id, "shape": shape_name, "mesh": mesh_kind,
+            "arch": spec.arch.id, "shape": shape_name,
+            "mesh": mesh_spec.label(),
             "mode": mode, "variant": spec.dryrun.variant,
         }
         if shape_name in arch.skipped_shapes():
             return self._with_payload(dict(
                 base, status="skipped",
                 reason=arch.skipped_shapes()[shape_name]))
-        mesh = self.mesh or build_mesh(mesh_kind)
+        mesh = self.mesh or build_mesh(mesh_spec)
         n_chips = mesh.devices.size
         serve_dtype = jnp.bfloat16 if mode == "dense" else jnp.float32
 
         kernel_registry.reset_dispatch_counts()
+        from repro.runtime.sharding import mesh_fallback_counts
+
+        fallbacks_before = mesh_fallback_counts()
         t0 = time.time()
         lowered = run_lower(arch, shape_name, mesh, step_cfg, serve_dtype)
         t_lower = time.time() - t0
@@ -567,7 +632,20 @@ class DryrunSession(Session):
             kernel_dispatch=kernel_dispatch,
             backward_sparsity=spec.sparsity.backward,
             memory=mem, collectives=coll, roofline=terms,
+            mesh_fallbacks={
+                logical: count - fallbacks_before.get(logical, 0)
+                for logical, count in mesh_fallback_counts().items()
+                if count - fallbacks_before.get(logical, 0)},
         )
+        if n_chips > 1:
+            # Measured packed-collective wire accounting at the probe
+            # density (the lowered program never executes in a dry run;
+            # this eager probe attributes inter-device traffic per cell).
+            from repro.dist.collectives import collective_probe
+
+            result["collective_probe"] = collective_probe(
+                spec.sparsity.probe_density,
+                world=max(2, min(4, int(n_chips))))
         if mode == "quant_sparse" and spec.sparsity.backward != "none" \
                 and sh.kind == "train":
             # Measured fwd/bwd tile-skip at the probe density: the lowered

@@ -48,6 +48,13 @@ RUN_MODES = ("train", "serve", "dryrun")
 MESH_KINDS = ("single", "multi", "debug", "debug_multi")
 LAYOUTS = ("tp", "fsdp")
 
+#: Compat spellings: the flat pre-mesh path ``shape.mesh=<kind>`` (old
+#: JSON artifacts, ``--set shape.mesh=multi``, the dryrun ``--mesh``
+#: shim) lands on the nested ``shape.mesh.kind`` leaf.  Aliases are
+#: resolved in ``_Builder.set`` so every layer (file/env/CLI/kwargs)
+#: gets them for free.
+_ALIASES = {"shape.mesh": "shape.mesh.kind"}
+
 #: Environment layer: SPRING_<NAME> -> dotted RunSpec field.  Applied
 #: between the spec file and CLI overrides.  ``SPRING_SET`` additionally
 #: accepts ';'-separated ``key=value`` dotted overrides.
@@ -110,6 +117,35 @@ class ArchSection:
 
 
 @dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Device-mesh topology (spring-mesh, DESIGN.md §14).
+
+    Explicit axis extents take precedence: when ``pod*data*model > 1``,
+    sessions build a ``("pod", "data", "model")`` mesh of exactly that
+    shape from the available devices.  Otherwise ``kind`` picks one of
+    the named launch meshes (``single`` = no mesh).  ``data`` must be a
+    power of two when > 1: the packed-collective bit-exactness guarantee
+    (tree-reduce of replicated gradients, then exact /2^k rescale) only
+    holds for power-of-two world sizes.
+    """
+
+    kind: str = "single"  # named mesh when no explicit axes are set
+    pod: int = 1
+    data: int = 1
+    model: int = 1
+
+    @property
+    def explicit(self) -> bool:
+        return self.pod * self.data * self.model > 1
+
+    def label(self) -> str:
+        """Flat string for run artifacts (roofline rows key on it)."""
+        if self.explicit:
+            return f"pod{self.pod}.data{self.data}.model{self.model}"
+        return self.kind
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeSection:
     """Problem shape: train batch/seq, serve prompt/gen, dryrun cell/mesh."""
 
@@ -118,7 +154,7 @@ class ShapeSection:
     prompt_len: int = 32
     gen: int = 16
     cell: str = "train_4k"  # dryrun shape-cell name (configs.SHAPES)
-    mesh: str = "single"  # dryrun mesh kind
+    mesh: MeshSpec = MeshSpec()  # device topology (kind or explicit axes)
     microbatch: Optional[int] = None  # None = per-arch dryrun default
     layout: str = "tp"
     seq_parallel: bool = False
@@ -261,18 +297,27 @@ _CHOICES = {
     "sparsity.backward": BACKWARD_SPARSITY_CHOICES,
     "memstash.policy": ("auto",) + STASH_POLICIES,
     "arch.remat_policy": ("", "full", "block_io", "stash"),
-    "shape.mesh": MESH_KINDS,
+    "shape.mesh.kind": MESH_KINDS,
     "shape.layout": LAYOUTS,
     "optimizer.kind": ("adamw", "sgdm"),
 }
 
 
 def field_paths() -> dict:
-    """{dotted path: python type} for every RunSpec field."""
+    """{dotted path: python type} for every RunSpec field.  Nested
+    dataclass fields (``shape.mesh``) contribute their leaves plus the
+    compat alias path (typed ``str``) so legacy flat spellings keep
+    validating."""
     idx = {"run": str}
     for sec, cls in _SECTIONS.items():
         for f in dataclasses.fields(cls):
-            idx[f"{sec}.{f.name}"] = f.type
+            if dataclasses.is_dataclass(f.type):
+                for sf in dataclasses.fields(f.type):
+                    idx[f"{sec}.{f.name}.{sf.name}"] = sf.type
+            else:
+                idx[f"{sec}.{f.name}"] = f.type
+    for alias in _ALIASES:
+        idx[alias] = str
     return idx
 
 
@@ -388,15 +433,19 @@ class RunSpec:
 
     def state_hash(self) -> str:
         """``spec_hash`` with the restart-operational serving fields
-        (snapshot cadence/paths) neutralized — the stamp embedded in
-        serving snapshots (DESIGN.md §13).  A run that merely *restores*
-        an artifact necessarily differs from the run that wrote it in
-        exactly these fields, so they must not poison the compatibility
-        check; anything numerics/shape/arch-shaped still rejects."""
+        (snapshot cadence/paths) *and* the mesh topology neutralized —
+        the stamp embedded in serving snapshots (DESIGN.md §13).  A run
+        that merely *restores* an artifact necessarily differs from the
+        run that wrote it in exactly these fields — and a snapshot taken
+        on one device count must restore onto another (elastic rescale
+        across topologies, DESIGN.md §14) — so they must not poison the
+        compatibility check; anything numerics/shape/arch-shaped still
+        rejects."""
         d = self.to_dict()
         for field in ("snapshot_every", "snapshot_path", "restore_path"):
             d["serving"][field] = ServingSection.__dataclass_fields__[
                 field].default
+        d["shape"]["mesh"] = dataclasses.asdict(MeshSpec())
         compact = json.dumps(d, sort_keys=True, separators=(",", ":"))
         return hashlib.sha256(compact.encode()).hexdigest()[:16]
 
@@ -424,14 +473,21 @@ class RunSpec:
     def from_file(cls, path: str) -> "RunSpec":
         return build_spec(spec_file=path, use_env=False)
 
+    def _get(self, path: str):
+        """Walk a dotted field path of any depth."""
+        obj = self
+        for part in path.split("."):
+            obj = getattr(obj, part)
+        return obj
+
     def describe(self) -> str:
         """Flat field = value  [provenance] rendering (debug/--explain)."""
         prov = dict(self.provenance)
         lines = []
         for path in sorted(_fields()):
-            sec, _, leaf = path.partition(".")
-            value = getattr(self, sec) if not leaf else getattr(
-                getattr(self, sec), leaf)
+            if path in _ALIASES:  # alias leaves are rendered, not the alias
+                continue
+            value = self._get(path)
             lines.append(f"{path} = {value!r}  [{prov.get(path, 'default')}]")
         return "\n".join(lines)
 
@@ -439,9 +495,7 @@ class RunSpec:
 
     def validate(self) -> "RunSpec":
         for path, choices in _CHOICES.items():
-            sec, _, leaf = path.partition(".")
-            value = self.run if path == "run" else getattr(
-                getattr(self, sec), leaf)
+            value = self._get(path)
             if value not in choices:
                 raise SpecError(
                     f"{path}: unknown value {value!r}; choose from "
@@ -454,6 +508,15 @@ class RunSpec:
                 f"{_suggest(self.shape.cell, SHAPES)}")
         if not 0.0 <= self.sparsity.probe_density <= 1.0:
             raise SpecError("sparsity.probe_density must be in [0, 1]")
+        for ax in ("pod", "data", "model"):
+            if getattr(self.shape.mesh, ax) < 1:
+                raise SpecError(f"shape.mesh.{ax} must be >= 1")
+        if self.shape.mesh.data > 1 and \
+                self.shape.mesh.data & (self.shape.mesh.data - 1):
+            raise SpecError(
+                "shape.mesh.data must be a power of two: the packed "
+                "collective bit-exactness seal (pairwise tree-reduce + "
+                "exact /2^k rescale) only holds for power-of-two worlds")
         if not 0.0 < self.telemetry.sample_rate <= 1.0:
             raise SpecError("telemetry.sample_rate must be in (0, 1]")
         if self.serving.page_tokens < 1:
@@ -633,6 +696,7 @@ class _Builder:
         self._prov: dict = {}
 
     def set(self, path: str, value, label: str, from_str: bool = False):
+        path = _ALIASES.get(path, path)
         if path not in _fields():
             raise SpecError(
                 f"unknown RunSpec field {path!r} (from {label})"
@@ -656,7 +720,11 @@ class _Builder:
                 raise SpecError(
                     f"section {key!r} must be an object (from {label})")
             for leaf, v in value.items():
-                self.set(f"{key}.{leaf}", v, label)
+                if isinstance(v, dict):  # nested subsection (shape.mesh)
+                    for subleaf, sv in v.items():
+                        self.set(f"{key}.{leaf}.{subleaf}", sv, label)
+                else:
+                    self.set(f"{key}.{leaf}", v, label)
 
     def overlay_env(self, environ: Mapping[str, str]):
         for var, path in ENV_FIELDS.items():
@@ -684,7 +752,13 @@ class _Builder:
             kw = {}
             for f in dataclasses.fields(cls):
                 path = f"{name}.{f.name}"
-                if path in self._values:
+                if dataclasses.is_dataclass(f.type):
+                    sub = {sf.name: self._values[f"{path}.{sf.name}"]
+                           for sf in dataclasses.fields(f.type)
+                           if f"{path}.{sf.name}" in self._values}
+                    if sub:
+                        kw[f.name] = f.type(**sub)
+                elif path in self._values:
                     kw[f.name] = self._values[path]
             try:
                 sections[name] = cls(**kw)

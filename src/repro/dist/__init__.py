@@ -1,0 +1,18 @@
+"""spring-mesh: sharded training & serving with packed collectives.
+
+SPRING's binary-mask format (20·density + 1 bits/elem) governs memory
+and the KV pool; this package puts it on the *wire*.  Inter-device
+traffic — parameter/gradient exchange in training, logits in serving —
+crosses the mesh as packed values + occupancy-mask words through the
+``packed_all_gather`` / ``packed_reduce_scatter`` registry op families
+(``repro.dist.collectives``), with the same exact byte accounting the
+rest of the attribution spine uses.  ``repro.dist.train`` and
+``repro.dist.serve`` build the ``shard_map``'d session programs;
+``repro.dist.mesh`` builds explicit ``(pod, data, model)`` meshes from a
+``MeshSpec``.  Semantics, wire format, and the bit-exactness guarantees
+are documented in DESIGN.md §14.
+
+Import submodules directly (``from repro.dist import collectives``);
+this package root stays import-light so the kernel registry can load
+``repro.dist.collectives`` without cycles.
+"""

@@ -1,0 +1,362 @@
+"""Packed collectives: ``packed_all_gather`` / ``packed_reduce_scatter``.
+
+SPRING's binary-mask format on the *wire* (DESIGN.md §14): a collective
+payload travels as its non-zeros collapsed to the front at the 20-bit
+SPRING value width plus 1-bit-per-element packed occupancy words, so the
+link moves ``20·density + 1`` bits/elem at word alignment instead of a
+dense fp32's 32.  Protocol per device: pack local shard -> all-gather the
+canonical (values, mask-words) pair -> unpack every row -> concatenate
+(all-gather) or pairwise-tree-sum and slice own shard (reduce-scatter).
+
+Both ops have two modes:
+
+  simulation   ``axis_name=None``; input is the stacked per-device
+               payload ``(D, n)`` and the collective is replayed locally.
+               This is what the registry parity examples (and the tier-1
+               bit-identity suite) exercise on one device.
+  collective   ``axis_name="data"`` under ``shard_map``; input is the
+               local ``(n,)`` shard and the wire hop is a real
+               ``jax.lax.all_gather`` wrapped in a ``jax.named_scope``
+               so HLO op_name metadata lands in the collective
+               attribution buckets.
+
+Bit-exactness: the reduction is a fixed pairwise tree (power-of-two
+worlds only — RunSpec validates ``shape.mesh.data``), so summing D
+identical addends yields exactly ``D·x`` and the later ``/D`` rescale is
+an exact exponent shift.  The only value canonicalization is
+``-0.0 -> +0.0`` (occupancy bit 0) — the ``kv_pack`` precedent, invisible
+to downstream math.
+
+Implementation ladder (through ``registry.resolve``): ref = cumsum-scatter
+collapse + reshape word pack; jnp = stable-argsort collapse + gather word
+pack; interpret = mask words from the Pallas ``mask_pack`` kernel in
+interpret mode (collapse via ref).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import (
+    MASK_WORD_BITS,
+    collapse_to_front,
+    expand_from_mask,
+    pack_mask_bits,
+    unpack_mask_bits,
+)
+from repro.kernels import registry
+
+#: SPRING wire width of one live value (IL4 + FL16 fixed point) — the
+#: same interface width the KV pool and memstash account with.
+COLLECTIVE_VALUE_BITS = 20
+
+
+def _n_words(n: int) -> int:
+    return (n + MASK_WORD_BITS - 1) // MASK_WORD_BITS
+
+
+# -- per-impl pack/unpack pairs ----------------------------------------------
+
+
+def _pack_ref(flat):
+    bits = flat != 0
+    return collapse_to_front(flat, bits, flat.shape[0]), pack_mask_bits(bits)
+
+
+def _unpack_ref(values, words, length):
+    return expand_from_mask(values, unpack_mask_bits(words, length))
+
+
+def _pack_jnp(flat):
+    # independent exact lowering: stable-argsort collapse + gather word pack
+    n = flat.shape[0]
+    bits = flat != 0
+    order = jnp.argsort(jnp.logical_not(bits), stable=True)
+    nnz = bits.sum().astype(jnp.int32)
+    values = jnp.where(jnp.arange(n) < nnz, flat[order],
+                       jnp.zeros((), flat.dtype))
+    word = jnp.arange(n) // MASK_WORD_BITS
+    shift = (jnp.arange(n) % MASK_WORD_BITS).astype(jnp.uint32)
+    contrib = jnp.where(bits, jnp.uint32(1) << shift, jnp.uint32(0))
+    words = jnp.zeros((_n_words(n),), jnp.uint32).at[word].add(contrib)
+    return values, words
+
+
+def _unpack_jnp(values, words, length):
+    idx = jnp.arange(length)
+    shift = (idx % MASK_WORD_BITS).astype(jnp.uint32)
+    bits = (words[idx // MASK_WORD_BITS] >> shift) & jnp.uint32(1)
+    src = jnp.cumsum(bits.astype(jnp.int32)) - 1
+    cap = values.shape[0]
+    live = (bits == 1) & (src < cap)
+    gathered = values[jnp.clip(src, 0, cap - 1)]
+    return jnp.where(live, gathered, jnp.zeros((), values.dtype))
+
+
+def _pack_kernel(flat, *, interpret):
+    from repro.kernels.mask_compress.mc_kernel import mask_pack_pallas
+    from repro.kernels.mask_compress.ops import _pad2d
+
+    n = flat.shape[0]
+    bits = flat != 0
+    x2d, _, _ = _pad2d(flat)
+    words = mask_pack_pallas(x2d, interpret=interpret)
+    words = words.reshape(-1)[:_n_words(n)]
+    return collapse_to_front(flat, bits, n), words
+
+
+def _pack_interpret(flat):
+    return _pack_kernel(flat, interpret=True)
+
+
+def _pack_pallas(flat):
+    return _pack_kernel(flat, interpret=False)
+
+
+def _tree_sum(rows):
+    """Fixed pairwise reduction over axis 0 — the §14 bit-exactness seal.
+    Requires a power-of-two row count (RunSpec validates mesh.data)."""
+    d = rows.shape[0]
+    if d & (d - 1):
+        raise ValueError(
+            f"packed reduce: world size must be a power of two, got {d}")
+    while rows.shape[0] > 1:
+        rows = rows[0::2] + rows[1::2]
+    return rows[0]
+
+
+# -- op factories -------------------------------------------------------------
+
+
+def _make_all_gather(pack, unpack):
+    def fn(x, *, axis_name: Optional[str] = None):
+        if axis_name is None:
+            d, n = x.shape
+            return jnp.concatenate(
+                [unpack(*pack(x[i]), n) for i in range(d)], axis=0)
+        (n,) = x.shape
+        v, w = pack(x)
+        with jax.named_scope("packed_all_gather"):
+            vg = jax.lax.all_gather(v, axis_name)
+            wg = jax.lax.all_gather(w, axis_name)
+        d = vg.shape[0]
+        return jnp.concatenate(
+            [unpack(vg[i], wg[i], n) for i in range(d)], axis=0)
+
+    return fn
+
+
+def _make_reduce_scatter(pack, unpack):
+    def fn(x, *, axis_name: Optional[str] = None):
+        if axis_name is None:
+            d, n = x.shape
+            if n % d:
+                raise ValueError(f"payload length {n} not divisible by world {d}")
+            rows = jnp.stack([unpack(*pack(x[i]), n) for i in range(d)])
+            return _tree_sum(rows).reshape(d, n // d)
+        (n,) = x.shape
+        v, w = pack(x)
+        with jax.named_scope("packed_reduce_scatter"):
+            vg = jax.lax.all_gather(v, axis_name)
+            wg = jax.lax.all_gather(w, axis_name)
+        d = vg.shape[0]
+        if n % d:
+            raise ValueError(f"payload length {n} not divisible by world {d}")
+        rows = jnp.stack([unpack(vg[i], wg[i], n) for i in range(d)])
+        total = _tree_sum(rows)
+        shard = n // d
+        return jax.lax.dynamic_slice_in_dim(
+            total, jax.lax.axis_index(axis_name) * shard, shard)
+
+    return fn
+
+
+# -- dense references (same tree order => per-shard bit-identity) ------------
+
+
+def dense_all_gather(x, *, axis_name: Optional[str] = None):
+    """Uncompressed reference with the packed op's exact semantics."""
+    if axis_name is None:
+        return x.reshape(-1)
+    with jax.named_scope("dense_all_gather"):
+        return jax.lax.all_gather(x, axis_name).reshape(-1)
+
+
+def dense_reduce_scatter(x, *, axis_name: Optional[str] = None):
+    """Uncompressed reference using the same pairwise tree reduction."""
+    if axis_name is None:
+        d, n = x.shape
+        return _tree_sum(x).reshape(d, n // d)
+    (n,) = x.shape
+    with jax.named_scope("dense_reduce_scatter"):
+        rows = jax.lax.all_gather(x, axis_name)
+    d = rows.shape[0]
+    total = _tree_sum(rows)
+    shard = n // d
+    return jax.lax.dynamic_slice_in_dim(
+        total, jax.lax.axis_index(axis_name) * shard, shard)
+
+
+# -- registry examples --------------------------------------------------------
+
+
+def _shard_block(seed: int, d: int, n: int, density: float,
+                 dtype=jnp.float32) -> jax.Array:
+    """Stacked per-device payload with elementwise density (sim mode)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (d, n), jnp.float32)
+    keep = jax.random.uniform(jax.random.fold_in(key, 1), (d, n)) < density
+    return jnp.where(keep, x, 0.0).astype(dtype)
+
+
+def _collective_examples() -> list:
+    # payload shapes mirror the session modes: dense fp32, quant (bf16 at
+    # ReLU-ish density), quant_sparse (pruned, word-unaligned), empty
+    return [
+        ((_shard_block(0, 2, 1024, 1.0),), {}),
+        ((_shard_block(1, 4, 512, 0.5, jnp.bfloat16),), {}),
+        ((_shard_block(2, 4, 500, 0.1),), {}),
+        ((jnp.zeros((2, 64), jnp.float32),), {}),
+    ]
+
+
+registry.register_op("packed_all_gather", oracle="ref",
+                     examples=_collective_examples,
+                     compare={"kind": "exact"})
+registry.register_impl("packed_all_gather", "ref", priority=10)(
+    _make_all_gather(_pack_ref, _unpack_ref))
+registry.register_impl("packed_all_gather", "jnp", priority=20)(
+    _make_all_gather(_pack_jnp, _unpack_jnp))
+registry.register_impl("packed_all_gather", "interpret", selectable=False)(
+    _make_all_gather(_pack_interpret, _unpack_jnp))
+registry.register_impl("packed_all_gather", "pallas", priority=30,
+                       available=registry.on_tpu)(
+    _make_all_gather(_pack_pallas, _unpack_jnp))
+
+registry.register_op("packed_reduce_scatter", oracle="ref",
+                     examples=_collective_examples,
+                     compare={"kind": "exact"})
+registry.register_impl("packed_reduce_scatter", "ref", priority=10)(
+    _make_reduce_scatter(_pack_ref, _unpack_ref))
+registry.register_impl("packed_reduce_scatter", "jnp", priority=20)(
+    _make_reduce_scatter(_pack_jnp, _unpack_jnp))
+registry.register_impl("packed_reduce_scatter", "interpret", selectable=False)(
+    _make_reduce_scatter(_pack_interpret, _unpack_jnp))
+registry.register_impl("packed_reduce_scatter", "pallas", priority=30,
+                       available=registry.on_tpu)(
+    _make_reduce_scatter(_pack_pallas, _unpack_jnp))
+
+
+# -- public wrappers ----------------------------------------------------------
+
+
+def collective_wire_bits(nnz, length: int, world: int,
+                         value_bits: int = COLLECTIVE_VALUE_BITS):
+    """Bits the link moves for one collective: every device contributes
+    its live values at the SPRING width plus its packed mask words.  At
+    word alignment this is ``world * length * (value_bits*density + 1)``
+    — the ``formula_bits_per_elem`` accounting."""
+    return nnz * value_bits + world * _n_words(length) * MASK_WORD_BITS
+
+
+def _note(op: str, x, axis_name: Optional[str]) -> None:
+    # host-side wire accounting: simulation mode only (in collective mode
+    # x is a tracer inside shard_map; dryrun measures via collective_probe)
+    if axis_name is not None or isinstance(x, jax.core.Tracer):
+        return
+    d, n = x.shape
+    nnz = float(jnp.count_nonzero(x))
+    wire = float(collective_wire_bits(nnz, n, d)) / 8.0
+    density = nnz / float(d * n) if d * n else 0.0
+    from repro.telemetry.metrics import default_registry
+
+    reg = default_registry()
+    reg.inc("spring_mesh_collective_bytes_total", wire, kind=op,
+            help="packed-collective wire bytes (formula accounting)")
+    reg.observe("spring_mesh_collective_density", density, kind=op,
+                help="elementwise density of collective payloads")
+    if registry.metrics_active():
+        registry.note_metric(op, wire_bytes=wire, density=density)
+
+
+def packed_all_gather(x: jax.Array, *, axis_name: Optional[str] = None,
+                      impl: Optional[str] = None) -> jax.Array:
+    """All-gather through the packed wire format.
+
+    Simulation mode (``axis_name=None``): ``x`` is ``(D, n)`` stacked
+    payloads; returns the ``(D*n,)`` device-order concatenation every
+    device would hold.  Collective mode: ``x`` is the local ``(n,)``
+    shard inside ``shard_map``; returns ``(D*n,)`` per device.
+    """
+    kimpl = registry.resolve("packed_all_gather", impl)
+    out = kimpl.fn(x, axis_name=axis_name)
+    _note("packed_all_gather", x, axis_name)
+    return out
+
+
+def packed_reduce_scatter(x: jax.Array, *, axis_name: Optional[str] = None,
+                          impl: Optional[str] = None) -> jax.Array:
+    """Reduce-scatter (pairwise-tree sum) through the packed wire format.
+
+    Simulation mode: ``x`` is ``(D, n)``; returns the ``(D, n//D)``
+    stacked shards.  Collective mode: local ``(n,)`` in, own ``(n//D,)``
+    shard out.
+    """
+    kimpl = registry.resolve("packed_reduce_scatter", impl)
+    out = kimpl.fn(x, axis_name=axis_name)
+    _note("packed_reduce_scatter", x, axis_name)
+    return out
+
+
+def packed_all_reduce_mean(flat: jax.Array, *, axis_name: str, world: int,
+                           impl: Optional[str] = None) -> jax.Array:
+    """Mean-all-reduce as RS -> /world -> AG (both hops packed).
+
+    Exact when the per-device inputs are identical and ``world`` is a
+    power of two: the tree sum yields exactly ``world*x`` and the rescale
+    is an exponent shift — the train-parity seal (DESIGN.md §14).
+    """
+    n = flat.shape[0]
+    pad = (-n) % world
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    shard = packed_reduce_scatter(flat, axis_name=axis_name, impl=impl)
+    shard = shard / world
+    full = packed_all_gather(shard, axis_name=axis_name, impl=impl)
+    return full[:n]
+
+
+def collective_probe(density: float = 0.5, world: int = 2,
+                     length: int = 1 << 14,
+                     impl: Optional[str] = None) -> dict:
+    """Eager packed-collective probe for dry-run attribution.
+
+    A lowered multi-chip cell never executes collectives on the host, so
+    this replays one all-gather in simulation mode at the given payload
+    density and reports the wire accounting: bytes moved, the reduction
+    vs a dense fp32 collective, the measured-over-formula ratio (1.0 at
+    word alignment — the ``20·density + 1`` cross-check), and whether the
+    round trip reproduced the payload bit-exactly.
+    """
+    x = _shard_block(0, world, length, density)
+    out = packed_all_gather(x, impl=impl)
+    nnz = int(jnp.count_nonzero(x))
+    wire = float(collective_wire_bits(nnz, length, world)) / 8.0
+    dense_bytes = world * length * 4.0
+    from repro.memstash.format import formula_bits_per_elem
+
+    formula = world * length * formula_bits_per_elem(
+        nnz / (world * length), COLLECTIVE_VALUE_BITS) / 8.0
+    return {
+        "world": world,
+        "density": nnz / (world * length),
+        "wire_bytes": wire,
+        "dense_bytes": dense_bytes,
+        "compression_vs_fp32": dense_bytes / wire,
+        "wire_vs_formula": wire / formula,
+        "exact": bool(jnp.array_equal(out, x.reshape(-1))),
+        "impl": registry.resolve("packed_all_gather", impl, _count=False).name,
+    }

@@ -67,6 +67,7 @@ _OP_MODULES = (
     "repro.kernels.stochastic_round.ops",
     "repro.kernels.flash_attention.ops",
     "repro.kernels.ssd_scan.ops",
+    "repro.dist.collectives",
 )
 
 

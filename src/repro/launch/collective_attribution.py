@@ -13,9 +13,12 @@ import sys
 
 from repro.launch.hlo_analysis import _COLLECTIVES, _shape_bytes
 
+# one head regex for every line-oriented pass: result shape (tuple or
+# scalar), op mnemonic, and — when present — the op_name metadata path
+# (group 3 is None on unattributed lines, e.g. top-level parameters)
 _LINE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(.*?"
-    r'(?:metadata=\{op_name="([^"]*)")?'
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)"
+    r'(?:.*metadata=\{[^}]*op_name="([^"]*)")?'
 )
 
 
@@ -24,6 +27,12 @@ def _bucket(op_name: str) -> str:
     if not op_name:
         return "(unattributed)"
     for key, label in [
+        # spring-mesh packed collectives announce themselves via
+        # jax.named_scope before any generic rule can claim the line
+        ("packed_all_gather", "mesh-packed-gather"),
+        ("packed_reduce_scatter", "mesh-packed-reduce"),
+        ("dense_all_gather", "mesh-dense-gather"),
+        ("dense_reduce_scatter", "mesh-dense-reduce"),
         ("transpose[", "backward"),
         ("chunked_softmax_xent", "loss/vocab"),
         ("checkpoint", "layer-remat"),
@@ -41,17 +50,15 @@ def _bucket(op_name: str) -> str:
 def attribute(hlo_text: str) -> dict[str, dict[str, float]]:
     out: dict[str, collections.Counter] = collections.defaultdict(collections.Counter)
     for line in hlo_text.splitlines():
-        s = line.strip()
-        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", s)
+        m = _LINE.match(line.strip())
         if not m:
             continue
-        shape_str, op = m.groups()
+        shape_str, op, op_name = m.groups()
         kind = next((c for c in _COLLECTIVES if op == c or op.startswith(c + "-start")), None)
         if kind is None or op.endswith("-done"):
             continue
-        nm = re.search(r'op_name="([^"]*)"', s)
-        dt = re.search(r"(f32|bf16|f16|s8|u8|s32)\[", shape_str)
-        bucket = f"{_bucket(nm.group(1) if nm else '')}:{dt.group(1) if dt else '?'}"
+        dt = re.search(r"(f32|bf16|f16|s8|u8|u32|s32)\[", shape_str)
+        bucket = f"{_bucket(op_name or '')}:{dt.group(1) if dt else '?'}"
         out[kind][bucket] += _shape_bytes(shape_str)
     return {k: dict(v) for k, v in out.items()}
 

@@ -157,6 +157,38 @@ def kv_cache_table(rows: list[dict]) -> str:
     return "\n".join(lines) if any_row else ""
 
 
+def collectives_table(rows: list[dict]) -> str:
+    """spring-mesh packed-collective accounting per dry-run cell: the
+    simulated wire bytes of one packed all-gather at the cell's probe
+    density, the reduction vs a dense fp32 collective, the ``20·d + 1``
+    formula cross-check, and any divisibility fallbacks the sharding
+    rules hit (``collective_probe`` / ``mesh_fallbacks`` fields, emitted
+    since spring-mesh landed; older JSONs are skipped)."""
+    lines = [
+        "| arch | shape | mesh | world | density | wire KB | vs fp32 | wire/formula | exact | fallbacks |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    any_row = False
+    for r in rows:
+        p = r.get("collective_probe")
+        fb = r.get("mesh_fallbacks") or {}
+        if r.get("status") != "ok" or (not p and not fb):
+            continue
+        any_row = True
+        fbs = " ".join(f"{k}x{int(v)}" for k, v in sorted(fb.items())) or "-"
+        if p:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {p['world']} "
+                f"| {p['density']:.2f} | {p['wire_bytes']/1e3:.1f} "
+                f"| {p['compression_vs_fp32']:.2f}x | {p['wire_vs_formula']:.4f} "
+                f"| {'yes' if p.get('exact') else 'NO'} | {fbs} |")
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| - | - | - | - | - | - | {fbs} |")
+    return "\n".join(lines) if any_row else ""
+
+
 def serving_table(results: list[dict]) -> str:
     """Render ``repro.launch.serve --json`` engine sessions: per-request
     latency percentiles, throughput, slot occupancy and measured KV
@@ -277,6 +309,10 @@ def main():
     if kv:
         print("\n## Serving KV cache (measured compression probes)\n")
         print(kv)
+    ct = collectives_table(rows)
+    if ct:
+        print("\n## Packed collectives (spring-mesh wire accounting)\n")
+        print(ct)
     print("\n## Hillclimb candidates\n")
     for n in pick_hillclimb(rows):
         print("-", n)

@@ -58,6 +58,12 @@ class SpringDesign:
     e_mem_bit_j: float = 4.5e-12  # RRAM via MIV, per bit moved
     e_buf_bit_j: float = 0.02e-12  # SRAM bit, amortized over lane-level reuse
     static_w: float = 5.0
+    # spring-mesh scale-out: inter-chip link bandwidth (bytes/s) for the
+    # packed-collective term; None (the single-chip paper design point)
+    # keeps every existing result bit-compatible.  SerDes energy per bit
+    # from 14nm short-reach link literature.
+    ici_bw: float | None = None
+    e_link_bit_j: float = 10e-12
 
     @property
     def peak_macs(self) -> float:
@@ -180,6 +186,26 @@ def measured_kv_wire_bytes(metric_rows: Iterable[dict]) -> float | None:
     return float(sum(r["wire_bytes"] for r in rows))
 
 
+def measured_collective_wire_bytes(metric_rows: Iterable[dict]) -> float | None:
+    """Total packed-collective wire bytes the eager hooks measured (sum
+    over ``packed_all_gather`` / ``packed_reduce_scatter`` simulation-mode
+    rows — the dry-run ``collective_probe`` and any exchange replayed
+    outside ``shard_map``; traffic accumulates, like
+    :func:`measured_kv_wire_bytes`), or None if no collective ran eagerly.
+
+    The spring-mesh counterpart of the other ``measured_*`` bridges: pass
+    it to :func:`spring_eval` as ``collective_bytes`` together with an
+    ``ici_bw``-bearing design so the scale-out link term is grounded in
+    what the packed wire format actually moved (``20·density + 1``
+    bits/elem) instead of dense fp32.
+    """
+    rows = [r for r in metric_rows
+            if r.get("op") in ("packed_all_gather", "packed_reduce_scatter")]
+    if not rows:
+        return None
+    return float(sum(r["wire_bytes"] for r in rows))
+
+
 def spring_eval(
     table: Iterable[LayerRecord],
     batch: int,
@@ -189,6 +215,7 @@ def spring_eval(
     w_sparsity: float = 0.5,
     compute_skip_fraction: float | None = None,
     backward_skip_fraction: float | None = None,
+    collective_bytes: float | None = None,
     design: SpringDesign = SPRING_DESIGN,
 ) -> AcceleratorResult:
     d_act = 1.0 - act_sparsity
@@ -231,6 +258,12 @@ def spring_eval(
         )
         total_t += t
         total_e += e
+    if collective_bytes is not None and design.ici_bw is not None:
+        # scale-out link term (spring-mesh): the measured packed-collective
+        # bytes serialize on the inter-chip link; None on either side keeps
+        # the single-chip paper results bit-compatible
+        total_t += collective_bytes / design.ici_bw
+        total_e += collective_bytes * 8.0 * design.e_link_bit_j
     total_e += design.static_w * total_t
     return AcceleratorResult(total_t, total_e / total_t if total_t else 0.0, total_e)
 

@@ -83,11 +83,34 @@ def override_rules(**updates):
     _CTX.rules.update(updates)
 
 
+def note_mesh_fallback(logical: str):
+    """Count one replicate-instead-of-shard fallback.  The divisibility
+    fallback used to be silent; the ``spring_mesh_fallback_total`` counter
+    (labeled by logical axis) surfaces it in dryrun JSON and the roofline
+    report (DESIGN.md §14)."""
+    from repro.telemetry.metrics import default_registry
+
+    default_registry().inc(
+        "spring_mesh_fallback_total", 1.0, logical=logical,
+        help="tensors replicated because no rule candidate divided")
+
+
+def mesh_fallback_counts() -> dict:
+    """{logical axis: fallback count} from the process metrics registry."""
+    from repro.telemetry.metrics import default_registry
+
+    snap = default_registry().snapshot()
+    fam = snap.get("spring_mesh_fallback_total", {})
+    return {cell["labels"].get("logical", "?"): int(cell["value"])
+            for cell in fam.get("cells", [])}
+
+
 def _mesh_axes_for(logical: Optional[str], dim: int, mesh: Mesh) -> Optional[tuple]:
     """Resolve one logical axis to mesh axes, honoring divisibility."""
     if logical is None:
         return None
     candidates = _CTX.rules.get(logical, (None,))
+    had_candidate = False
     for cand in candidates:
         if cand is None:
             return None
@@ -97,8 +120,14 @@ def _mesh_axes_for(logical: Optional[str], dim: int, mesh: Mesh) -> Optional[tup
         extent = 1
         for a in axes:
             extent *= mesh.shape[a]
+        if extent > 1:
+            had_candidate = True
         if dim % extent == 0:
             return axes
+    if had_candidate:
+        # a rule wanted to shard this tensor but no candidate divided:
+        # replicate, and make the fallback visible (satellite of §14)
+        note_mesh_fallback(logical)
     return None
 
 

@@ -137,9 +137,17 @@ def _rules_for(step_cfg: StepConfig):
     return rules
 
 
-def make_train_step(arch, step_cfg: StepConfig, mesh=None, reduced: bool = False):
+def make_train_step(arch, step_cfg: StepConfig, mesh=None, reduced: bool = False,
+                    grad_sync=None):
     """Build the SPMD train step.  With ``mesh`` set, logical sharding
-    constraints activate and the function is ready to jit with shardings."""
+    constraints activate and the function is ready to jit with shardings.
+
+    ``grad_sync`` (grads-tree -> grads-tree) runs between the backward
+    pass and the optimizer — the seam where spring-mesh splices its
+    packed reduce-scatter/all-gather gradient exchange (DESIGN.md §14).
+    It composes with the ``compress_pod_grads`` int8+EF pod link, which
+    stays where it was (per-pod grads differ; the data-axis exchange
+    ``grad_sync`` carries is a different link)."""
     cfg = arch.reduced() if reduced else arch.config
     _, opt_update = make_optimizer(step_cfg.optimizer)
     spring_cfg = _spring_for(step_cfg)
@@ -189,6 +197,8 @@ def make_train_step(arch, step_cfg: StepConfig, mesh=None, reduced: bool = False
         key = jax.random.fold_in(state.rng, state.step)
         with sharding_context(mesh, _rules_for(step_cfg)):
             loss, metrics, grads = grads_and_loss(state.params, batch, key)
+            if grad_sync is not None:
+                grads = grad_sync(grads)
             new_p, new_opt, om = opt_update(grads, state.opt_state, state.params,
                                             jax.random.fold_in(key, 0x5eed))
         metrics = dict(metrics, loss=loss, **om)

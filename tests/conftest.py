@@ -65,6 +65,25 @@ def pytest_configure(config):
         "elastic: spring-survive chaos/snapshot/shed suite "
         "(CI elastic job runs `pytest -m elastic`)",
     )
+    config.addinivalue_line(
+        "markers",
+        "mesh: spring-mesh packed-collective + sharded-oracle parity suite "
+        "(CI mesh job runs `pytest -m mesh` under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8; "
+        "device-gated tests self-skip on a 1-device host)",
+    )
+
+
+@pytest.fixture
+def debug_mesh():
+    """An explicit pod1.data4.model1 mesh over 8 host devices; skips when
+    the pool is too small (tier-1 runs single-device — the CI mesh job
+    sets the XLA flag before jax initializes)."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    from repro.dist.mesh import make_explicit_mesh
+
+    return make_explicit_mesh(1, 4, 1)
 
 
 @pytest.fixture(autouse=True)

@@ -1,0 +1,100 @@
+"""Direct unit tests for the HLO collective-byte accounting that feeds
+the dry-run attribution spine: ``launch.collective_attribution.attribute``
+(named-scope buckets, the unattributed path of ``_LINE``) and
+``launch.hlo_analysis.collective_bytes`` (-start/-done pairing,
+``bf16_correct`` payload halving) — on a fixed HLO snippet shaped like
+what ``jax.jit`` + ``shard_map`` actually emit for the spring-mesh
+packed collectives, so a regex regression can't silently zero the
+roofline collectives table again.
+"""
+
+import pytest
+
+from repro.launch.collective_attribution import _LINE, attribute
+from repro.launch.hlo_analysis import collective_bytes
+
+pytestmark = pytest.mark.mesh
+
+# Captured-by-hand module: two packed all-gathers (values f32, mask
+# words u32), a dense bf16 reference gather, an unattributed all-reduce
+# (no metadata at all), an async reduce-scatter pair (-start carries the
+# tuple shape and must be counted exactly once; -done must be skipped),
+# and a non-collective dot that no pass may count.
+HLO = """\
+HloModule jit_step, entry_computation_layout={(f32[1,512]{1,0})->f32[4,512]{1,0}}
+
+ENTRY %main.42 (p.1: f32[1,512]) {
+  %p.1 = f32[1,512]{1,0} parameter(0)
+  %all-gather.1 = f32[4,512]{1,0} all-gather(f32[1,512]{1,0} %p.1), replica_groups={{0,1,2,3}}, dimensions={0}, metadata={op_name="jit(step)/packed_all_gather/all_gather[axis_name=data]" source_file="collectives.py" source_line=210}
+  %all-gather.2 = u32[4,16]{1,0} all-gather(u32[1,16]{1,0} %w.1), replica_groups={{0,1,2,3}}, dimensions={0}, metadata={op_name="jit(step)/packed_all_gather/all_gather[axis_name=data]"}
+  %all-gather.7 = bf16[4,256]{1,0} all-gather(bf16[1,256]{1,0} %v.1), replica_groups={{0,1,2,3}}, dimensions={0}, metadata={op_name="jit(step)/dense_all_gather/all_gather"}
+  %all-reduce.3 = f32[128]{0} all-reduce(f32[128]{0} %x.1), replica_groups={}, to_apply=%region_0.9
+  %reduce-scatter-start.4 = (f32[2048]{0}, f32[512]{0}) reduce-scatter-start(f32[2048]{0} %g.1), replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%region_1.13, metadata={op_name="jit(step)/packed_reduce_scatter/reduce_scatter"}
+  %reduce-scatter-done.5 = f32[512]{0} reduce-scatter-done((f32[2048]{0}, f32[512]{0}) %reduce-scatter-start.4), metadata={op_name="jit(step)/packed_reduce_scatter/reduce_scatter"}
+  ROOT %dot.6 = f32[64,64]{1,0} dot(f32[64,32]{1,0} %a.1, f32[32,64]{1,0} %b.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}, metadata={op_name="jit(step)/dot_general[dimension_numbers=(((1,), (0,)), ((), ()))]"}
+}
+"""
+
+
+def test_line_regex_captures_metadata_and_unattributed_path():
+    attributed = ('%all-gather.1 = f32[4,512]{1,0} all-gather(f32[1,512]{1,0}'
+                  ' %p.1), metadata={op_name="jit(step)/packed_all_gather/ag"'
+                  ' source_file="c.py"}')
+    m = _LINE.match(attributed)
+    assert m.group(2) == "all-gather"
+    assert m.group(3) == "jit(step)/packed_all_gather/ag"
+    # metadata without op_name (and no metadata at all) both land in the
+    # optional third group as None — the "(unattributed)" bucket
+    for bare in (
+        "%all-reduce.3 = f32[128]{0} all-reduce(f32[128]{0} %x.1)",
+        "%all-reduce.3 = f32[128]{0} all-reduce(f32[128]{0} %x.1), "
+        'metadata={source_file="x.py" source_line=3}',
+    ):
+        m = _LINE.match(bare)
+        assert m.group(2) == "all-reduce"
+        assert m.group(3) is None
+    # tuple result shapes (async -start ops) capture the whole tuple
+    m = _LINE.match("%reduce-scatter-start.4 = (f32[2048]{0}, f32[512]{0}) "
+                    "reduce-scatter-start(f32[2048]{0} %g.1)")
+    assert m.group(1) == "(f32[2048]{0}, f32[512]{0})"
+    assert m.group(2) == "reduce-scatter-start"
+
+
+def test_attribute_buckets_mesh_collectives():
+    out = attribute(HLO)
+    assert out["all-gather"] == {
+        "mesh-packed-gather:f32": 4 * 512 * 4,
+        "mesh-packed-gather:u32": 4 * 16 * 4,
+        "mesh-dense-gather:bf16": 4 * 256 * 2,
+    }
+    # no metadata at all -> the unattributed bucket, dtype still sniffed
+    assert out["all-reduce"] == {"(unattributed):f32": 128 * 4}
+    # -start counted (full tuple: operand staging + result), -done skipped
+    assert out["reduce-scatter"] == {
+        "mesh-packed-reduce:f32": (2048 + 512) * 4,
+    }
+    # the dot contributes to no collective kind
+    assert set(out) == {"all-gather", "all-reduce", "reduce-scatter"}
+
+
+def test_collective_bytes_start_done_pairing_and_totals():
+    out = collective_bytes(HLO)
+    ag = 4 * 512 * 4 + 4 * 16 * 4 + 4 * 256 * 2
+    ar = 128 * 4
+    rs = (2048 + 512) * 4
+    assert out["all-gather"] == ag
+    assert out["all-reduce"] == ar
+    assert out["reduce-scatter"] == rs
+    assert out["count"] == 5  # the -done line must not double-count
+    assert out["total"] == ag + ar + rs
+    assert out["total_raw_f32"] == out["total"]
+
+
+def test_collective_bytes_bf16_correct_halves_f32_payloads():
+    out = collective_bytes(HLO, bf16_correct=True)
+    # f32 payloads re-counted at 2 bytes/elem; u32 masks and native bf16
+    # untouched; the raw f32 total is preserved alongside
+    assert out["all-gather"] == 4 * 512 * 2 + 4 * 16 * 4 + 4 * 256 * 2
+    assert out["all-reduce"] == 128 * 2
+    assert out["reduce-scatter"] == (2048 + 512) * 2
+    assert out["total_raw_f32"] == collective_bytes(HLO)["total"]

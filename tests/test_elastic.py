@@ -337,6 +337,22 @@ def test_restore_structural_mismatch_rejected():
         eng.restore(bad)
 
 
+def test_state_hash_invariant_across_mesh_topology():
+    """Snapshots are stamped with state_hash (engine restore gates on it):
+    spring-mesh topology must not poison it, or a snapshot taken on one
+    device count could never restore onto another — while anything that
+    changes the numerical state must still flip it."""
+    from repro.api.spec import build_spec
+
+    base = build_spec("serve", use_env=False)
+    resized = build_spec("serve", use_env=False,
+                         sets=["shape.mesh.data=4", "shape.mesh.pod=2"])
+    assert base.spec_hash() != resized.spec_hash()
+    assert base.state_hash() == resized.state_hash()
+    numerics = build_spec("serve", use_env=False, sets=["numerics.mode=quant"])
+    assert numerics.state_hash() != base.state_hash()
+
+
 # -- live rescaling ----------------------------------------------------------
 
 
